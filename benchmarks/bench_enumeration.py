@@ -1,0 +1,58 @@
+"""Paper Sec. 7.3 'Enumeration Time': wall-clock of plan enumeration — the
+paper reports <1654 ms for all evaluation flows on 2012 hardware."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import flows
+from repro.core import flow as F
+from repro.core.enumeration import enum_alternatives_alg1, enumerate_plans
+from repro.core.record import Schema
+
+from . import common
+
+
+def _chain(n_ops: int):
+    """Worst-case fully-commuting Map chain (n! orders)."""
+    sch = Schema.of(**{f"f{i}": np.int64 for i in range(n_ops)})
+    node = F.source("I", sch)
+    for i in range(n_ops):
+        def udf(ir, out, i=i):
+            out.emit(ir.copy().set(f"f{i}", ir.get(f"f{i}") + 1))
+
+        udf.__name__ = f"op{i}"
+        node = F.map_(node, udf, name=f"op{i}")
+    return node
+
+
+def run(quick: bool = False):
+    rows = []
+    for name, builder in flows.FLOWS.items():
+        root, _ = builder()
+        t0 = time.perf_counter()
+        plans = enumerate_plans(root)
+        ms = (time.perf_counter() - t0) * 1e3
+        rows.append({"flow": name, "plans": len(plans), "enum_ms": ms})
+    max_n = 5 if quick else 7
+    for n in range(3, max_n + 1):
+        chain = _chain(n)
+        t0 = time.perf_counter()
+        plans = enumerate_plans(chain)
+        ms = (time.perf_counter() - t0) * 1e3
+        t0 = time.perf_counter()
+        alg1 = enum_alternatives_alg1(chain)
+        ms1 = (time.perf_counter() - t0) * 1e3
+        assert len(plans) == len(alg1)
+        rows.append({"flow": f"map-chain-{n} ({n}!={len(plans)})",
+                     "plans": len(plans), "enum_ms": ms,
+                     "alg1_ms": ms1})
+    common.print_rows("bench_enumeration (Sec. 7.3)", rows)
+    return {"name": "enumeration",
+            "max_ms": max(r["enum_ms"] for r in rows)}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Paper Fig. 5: TPC-H Q7 — estimated cost vs measured runtime for 10 plans
+picked at regular rank intervals over the enumerated space."""
+
+from __future__ import annotations
+
+from repro.configs import flows
+from repro.core.optimizer import optimize
+from repro.core.physical import Ctx
+
+from . import common
+
+
+def run(n: int = 40_000, dop: int = 32, quick: bool = False):
+    root, bindings = flows.q7()
+    res = optimize(root, Ctx(dop=dop), include_commutes=False)
+    b = bindings(n if not quick else 8000, seed=0)
+    rows = common.rank_interval_rows(res, b, k=10,
+                                     repeats=1 if quick else 3)
+    rho = common.spearman([r["est_cost_norm"] for r in rows],
+                          [r["runtime_norm"] for r in rows])
+    common.print_rows("bench_q7 (Fig. 5)", rows)
+    print(f"plans={res.num_plans} enum_ms={res.enumeration_s * 1e3:.1f} "
+          f"cost_ms={res.costing_s * 1e3:.1f} spearman={rho:.3f} "
+          f"worst/best_runtime={max(r['runtime_norm'] for r in rows):.2f}x")
+    return {"name": "q7", "plans": res.num_plans, "spearman": rho,
+            "spread": max(r["runtime_norm"] for r in rows),
+            "est_spread": max(r["est_cost_norm"] for r in rows),
+            "enum_ms": res.enumeration_s * 1e3}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Paper Table 1: number of enumerated reordered alternatives with manually
+annotated properties vs properties derived by static code analysis.
+
+'manual' rebuilds each flow with hand-equivalent exact annotations (the jaxpr
+dependence sets, spot-verified in tests/test_sca.py); 'bytecode-sca' is the
+paper-faithful conservative analyzer.  Conservatism can only LOSE plans —
+never adds an invalid one (safety), which this benchmark also asserts."""
+
+from __future__ import annotations
+
+from repro.configs import flows
+from repro.core.enumeration import enumerate_plans
+
+from . import common
+
+
+def _counts(builder):
+    out = {}
+    for mode in ("jaxpr", "bytecode"):
+        import repro.core.flow as F
+
+        orig = F.analyze_udf
+
+        def patched(udf, kind, schemas, mode=mode, _orig=orig, **kw):
+            kw["mode"] = mode
+            return _orig(udf, kind, schemas, **kw)
+
+        F.analyze_udf = patched
+        try:
+            root, _ = builder()
+            out[mode] = len(enumerate_plans(root, include_commutes=False))
+        except Exception as e:
+            out[mode] = f"error:{type(e).__name__}"
+        finally:
+            F.analyze_udf = orig
+    return out
+
+
+def run(quick: bool = False):
+    rows = []
+    for name, builder in flows.FLOWS.items():
+        c = _counts(builder)
+        manual = c["jaxpr"]  # exact annotations
+        byte_n = c["bytecode"]
+        pct = (f"{100 * byte_n / manual:.0f}%"
+               if isinstance(byte_n, int) and isinstance(manual, int)
+               else "-")
+        rows.append({"task": name, "manual_orders": manual,
+                     "bytecode_sca_orders": byte_n, "recovered": pct})
+        if isinstance(byte_n, int) and isinstance(manual, int):
+            assert byte_n <= manual, "conservatism must not ADD plans"
+    common.print_rows("bench_sca (Table 1)", rows)
+    return {"name": "sca",
+            **{r["task"]: r["recovered"] for r in rows}}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Paper Fig. 6: biomedical text-mining pipeline — selectivity/cost-driven
+reordering of black-box NLP extractors (24 valid orders = 4!)."""
+
+from __future__ import annotations
+
+from repro.configs import flows
+from repro.core.optimizer import optimize
+from repro.core.physical import Ctx
+
+from . import common
+
+
+def run(n: int = 60_000, dop: int = 32, quick: bool = False):
+    root, bindings = flows.textmining()
+    res = optimize(root, Ctx(dop=dop), include_commutes=False)
+    b = bindings(n if not quick else 10_000, seed=0)
+    rows = common.rank_interval_rows(res, b, k=10, repeats=1 if quick else 3)
+    rho = common.spearman([r["est_cost_norm"] for r in rows],
+                          [r["runtime_norm"] for r in rows])
+    common.print_rows("bench_textmining (Fig. 6)", rows)
+    print(f"plans={res.num_plans} (expect 4! = 24) spearman={rho:.3f} "
+          f"worst/best={max(r['runtime_norm'] for r in rows):.2f}x")
+    return {"name": "textmining", "plans": res.num_plans, "spearman": rho,
+            "spread": max(r["runtime_norm"] for r in rows)}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Shared benchmark helpers: timing, rank-interval plan selection, CSV."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import executor
+
+
+def time_plan(flow, bindings, repeats: int = 3) -> float:
+    """Median wall-clock seconds of eager execution."""
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        executor.execute(flow, bindings)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def rank_interval_rows(opt_result, bindings, k: int = 10, repeats: int = 3):
+    """The paper's Figs. 5-7 method: pick k plans at regular rank intervals,
+    execute each, report (rank, est cost, runtime) normalized to the best."""
+    picked = opt_result.pick_rank_intervals(k)
+    base_cost = opt_result.ranked[0].cost
+    runtimes = [time_plan(rp.flow, bindings, repeats) for rp in picked]
+    base_rt = min(runtimes)
+    rows = []
+    for rp, rt in zip(picked, runtimes):
+        rank = opt_result.ranked.index(rp) + 1
+        rows.append({
+            "rank": rank,
+            "est_cost_norm": rp.cost / base_cost,
+            "runtime_norm": rt / base_rt,
+            "runtime_s": rt,
+            "order": rp.order(),
+        })
+    return rows
+
+
+def spearman(xs, ys) -> float:
+    """Rank correlation between cost estimates and runtimes."""
+    xr = np.argsort(np.argsort(xs)).astype(float)
+    yr = np.argsort(np.argsort(ys)).astype(float)
+    if xr.std() == 0 or yr.std() == 0:
+        return 1.0
+    return float(np.corrcoef(xr, yr)[0, 1])
+
+
+def print_rows(name: str, rows: list[dict]):
+    cols = list(rows[0].keys()) if rows else []
+    print(f"\n== {name} ==")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
+                       for c in cols))

@@ -1,0 +1,50 @@
+"""Run every benchmark (one per paper table/figure) and print a summary.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller data / fewer repeats")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (bench_clickstream, bench_enumeration, bench_q7, bench_q15,
+                   bench_roofline, bench_sca, bench_textmining)
+
+    benches = {
+        "q7": bench_q7, "q15": bench_q15, "textmining": bench_textmining,
+        "clickstream": bench_clickstream, "sca": bench_sca,
+        "enumeration": bench_enumeration, "roofline": bench_roofline,
+    }
+    if args.only:
+        benches = {k: v for k, v in benches.items()
+                   if k in args.only.split(",")}
+
+    summaries = []
+    for name, mod in benches.items():
+        t0 = time.perf_counter()
+        try:
+            s = mod.run(quick=args.quick)
+        except Exception as e:  # pragma: no cover
+            s = {"name": name, "error": repr(e)}
+        s["wall_s"] = round(time.perf_counter() - t0, 2)
+        summaries.append(s)
+
+    print("\n==== summary ====")
+    for s in summaries:
+        print(s)
+    if any("error" in s for s in summaries):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""repro — "Opening the Black Boxes in Data Flow Optimization" on JAX/TPU.
+
+The data-flow plane (record batches, black-box UDFs) matches numpy int64 /
+float64 semantics, so 64-bit mode is enabled package-wide.  Model-plane code
+(`repro.models`, `repro.train`, `repro.serve`) uses explicit dtypes
+(bf16/f32) everywhere and is unaffected by the default-dtype change.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,125 @@
+"""Cardinality / size estimation (paper Sec. 7.1 compiler hints).
+
+Mirrors Stratosphere's estimator: per-operator hints ("Average Number of
+Records Emitted per UDF Call", "Number of Distinct Values per Key-Set",
+PK/FK knowledge, CPU cost per call) drive recursive cardinality estimates.
+Where a hint is missing, defaults are derived from the SCA-detected emission
+cardinality class — the black-box analogue of textbook selectivity defaults.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from .operators import (CoGroupOp, CrossOp, MapOp, MatchOp, Node, ReduceOp,
+                        Source)
+from .udf import Card, KatEmit
+
+# Selectivity defaults by detected cardinality class
+DEFAULT_FILTER_SELECTIVITY = 0.5
+DEFAULT_GROUPING_FACTOR = 0.1       # distinct keys / rows when no hint
+DEFAULT_GROUP_FILTER_SELECTIVITY = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class Stats:
+    rows: float                 # estimated record count
+    width: int                  # bytes per record (from the output schema)
+    distinct: Optional[float] = None   # distinct key-groups (KAT outputs)
+
+    @property
+    def bytes(self) -> float:
+        return self.rows * self.width
+
+
+def _map_selectivity(op: MapOp) -> float:
+    if op.hints.selectivity is not None:
+        return op.hints.selectivity
+    if op.props.card is Card.ONE:
+        return 1.0
+    if op.props.card is Card.AT_MOST_ONE:
+        return DEFAULT_FILTER_SELECTIVITY
+    return 1.0
+
+
+def estimate(node: Node, memo: Optional[dict] = None) -> Stats:
+    """Recursive cardinality/size estimate for `node`'s output."""
+    if memo is None:
+        memo = {}
+    key = node.canonical()
+    if key in memo:
+        return memo[key]
+
+    width = node.out_schema.width_bytes()
+
+    if isinstance(node, Source):
+        st = Stats(rows=float(node.num_records), width=width)
+    elif isinstance(node, MapOp):
+        cin = estimate(node.child, memo)
+        st = Stats(rows=cin.rows * _map_selectivity(node), width=width,
+                   distinct=cin.distinct)
+    elif isinstance(node, ReduceOp):
+        cin = estimate(node.child, memo)
+        groups = float(node.hints.distinct_keys) if node.hints.distinct_keys \
+            else max(1.0, cin.rows * DEFAULT_GROUPING_FACTOR)
+        groups = min(groups, cin.rows) if cin.rows else groups
+        ke = node.props.kat_emit
+        if ke in (KatEmit.PASSTHROUGH, None):
+            rows = cin.rows
+        elif ke is KatEmit.PASSTHROUGH_FILTER:
+            gsel = node.hints.group_selectivity
+            rows = cin.rows * (gsel if gsel is not None
+                               else DEFAULT_GROUP_FILTER_SELECTIVITY)
+        elif ke is KatEmit.PER_GROUP_FILTER:
+            gsel = node.hints.group_selectivity
+            rows = groups * (gsel if gsel is not None
+                             else DEFAULT_GROUP_FILTER_SELECTIVITY)
+        else:  # PER_GROUP, MANY
+            rows = groups
+        st = Stats(rows=rows, width=width, distinct=groups)
+    elif isinstance(node, MatchOp):
+        ls, rs = estimate(node.left, memo), estimate(node.right, memo)
+        if node.hints.join_fanout is not None:
+            rows = ls.rows * node.hints.join_fanout
+        elif node.hints.pk_side == "right":
+            rows = ls.rows * (node.hints.selectivity or 1.0)
+        elif node.hints.pk_side == "left":
+            rows = rs.rows * (node.hints.selectivity or 1.0)
+        else:
+            # |L||R| / max(d_L, d_R) with defaulted distinct counts
+            dl = ls.distinct or max(1.0, ls.rows * DEFAULT_GROUPING_FACTOR)
+            dr = rs.distinct or max(1.0, rs.rows * DEFAULT_GROUPING_FACTOR)
+            rows = ls.rows * rs.rows / max(dl, dr, 1.0)
+        rows *= _map_selectivity_like(node)
+        st = Stats(rows=rows, width=width)
+    elif isinstance(node, CrossOp):
+        ls, rs = estimate(node.left, memo), estimate(node.right, memo)
+        st = Stats(rows=ls.rows * rs.rows * _map_selectivity_like(node),
+                   width=width)
+    elif isinstance(node, CoGroupOp):
+        ls, rs = estimate(node.left, memo), estimate(node.right, memo)
+        groups = float(node.hints.distinct_keys) if node.hints.distinct_keys \
+            else max(1.0, max(ls.rows, rs.rows) * DEFAULT_GROUPING_FACTOR)
+        st = Stats(rows=groups, width=width, distinct=groups)
+    else:
+        raise TypeError(type(node).__name__)
+
+    memo[key] = st
+    return st
+
+
+def _map_selectivity_like(node) -> float:
+    """UDF-level selectivity of a binary RAT operator's first-order fn."""
+    if node.hints.selectivity is not None:
+        return node.hints.selectivity
+    if node.props.card is Card.AT_MOST_ONE:
+        return DEFAULT_FILTER_SELECTIVITY
+    return 1.0
+
+
+def sort_flops(rows: float) -> float:
+    """Comparison-sort work estimate for local sort strategies."""
+    r = max(rows, 2.0)
+    return 16.0 * r * math.log2(r)

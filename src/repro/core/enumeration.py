@@ -1,0 +1,140 @@
+"""Plan enumeration (paper Sec. 6).
+
+Two enumerators are provided:
+
+* `enum_alternatives_alg1` — a faithful implementation of the paper's
+  Algorithm 1 for unary-operator flows: recursive descent, exchange of
+  neighbouring operators via `reorderable(r, s)`, candidate roots visited
+  once, memo table keyed on the flow's operator multiset + source.
+
+* `enumerate_plans` — the production enumerator for tree-shaped flows with
+  binary operators: a memoized fix-point closure over all valid single-step
+  rewrites (unary swaps, pushes into/out of binary operators, rotations,
+  commutations).  On purely unary flows it returns exactly the Algorithm-1
+  space (tested); on trees it realizes the paper's "easily extended to
+  non-unary operators" claim, including bushy join orders.
+
+Both return logical plans only; the physical optimizer prices each.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Iterable, Optional
+
+from .operators import MapOp, Node, ReduceOp, Source
+from .reorder import local_rewrites, reorderable
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 (unary flows) — faithful port of the paper's pseudocode
+# ---------------------------------------------------------------------------
+def _mtab_key(flow: Node) -> tuple:
+    """Memo key: the *set* of operators plus the source — Algorithm 1 memoizes
+    sub-flows regardless of their current order (all orders of the same ops
+    over the same input enumerate the same alternatives)."""
+    names = tuple(sorted(n.name for n in flow.iter_nodes()))
+    return names
+
+
+def enum_alternatives_alg1(flow: Node,
+                           mtab: Optional[dict] = None) -> list[Node]:
+    """Paper Algorithm 1 (lines 1-29) for single-input operator flows."""
+    if mtab is None:
+        mtab = {}
+    key = _mtab_key(flow)
+    if key in mtab:  # line 4-6
+        return mtab[key]
+
+    r = flow  # getRoot: the tree root IS the last operator          (line 7)
+    if isinstance(r, Source):  # line 8-9
+        alts = [r]
+        mtab[key] = alts
+        return alts
+    if not isinstance(r, (MapOp, ReduceOp)):
+        raise ValueError("Algorithm 1 handles unary flows only; "
+                         "use enumerate_plans for trees")
+
+    cand: set = set()  # line 16
+    d_minus_r = r.children[0]  # rmRoot                               (line 17)
+    alts_minus_r = enum_alternatives_alg1(d_minus_r, mtab)  # line 18
+    alts: list[Node] = []
+    seen: set = set()
+
+    def add(tree: Node):
+        c = tree.canonical()
+        if c not in seen:
+            seen.add(c)
+            alts.append(tree)
+
+    for a_minus_r in alts_minus_r:  # line 19
+        s = a_minus_r  # getRoot(A_-r)                                (line 20)
+        add(r.with_children(a_minus_r))  # addRoot                    (line 21)
+        if isinstance(s, Source):
+            continue
+        if s.name not in cand and reorderable(r, s):  # line 22
+            cand.add(s.name)  # line 23
+            # setRoot(A_-r, r): replace s with r                      (line 24)
+            d_minus_s = r.with_children(s.children[0])
+            for a_minus_s in enum_alternatives_alg1(d_minus_s, mtab):  # 25-26
+                add(s.with_children(a_minus_s))  # line 27
+
+    mtab[key] = alts  # line 28
+    return alts
+
+
+# ---------------------------------------------------------------------------
+# Closure enumerator (trees with binary operators)
+# ---------------------------------------------------------------------------
+def _rewrites_everywhere(tree: Node) -> Iterable[Node]:
+    """All trees obtained by one valid rewrite at any position in `tree`."""
+    for t in local_rewrites(tree):
+        yield t
+    for i, child in enumerate(tree.children):
+        for sub in _rewrites_everywhere(child):
+            kids = list(tree.children)
+            kids[i] = sub
+            try:
+                yield tree.with_children(*kids)
+            except (ValueError, KeyError):
+                continue
+
+
+def enumerate_plans(flow: Node, max_plans: int = 20000,
+                    include_commutes: bool = True) -> list[Node]:
+    """All data flows reachable from `flow` by valid pairwise reorderings.
+
+    `include_commutes=False` collapses Match/Cross argument order: commuted
+    variants are still *traversed* (they unlock rotations) but deduplicated in
+    the returned list by a side-order-insensitive canonical form, matching the
+    paper's notion of distinct operator orders.
+    """
+    seen: dict[str, Node] = {flow.canonical(): flow}
+    work = [flow]
+    while work:
+        cur = work.pop()
+        for t in _rewrites_everywhere(cur):
+            c = t.canonical()
+            if c not in seen:
+                if len(seen) >= max_plans:
+                    raise RuntimeError(f"plan space exceeds {max_plans}")
+                seen[c] = t
+                work.append(t)
+
+    plans = list(seen.values())
+    if include_commutes:
+        return plans
+    uniq: dict[str, Node] = {}
+    for p in plans:
+        uniq.setdefault(_commute_canonical(p), p)
+    return list(uniq.values())
+
+
+def _commute_canonical(node: Node) -> str:
+    if not node.children:
+        return node.name
+    parts = sorted(_commute_canonical(c) for c in node.children)
+    return f"{node.name}({','.join(parts)})"
+
+
+def count_plans(flow: Node, **kw) -> int:
+    return len(enumerate_plans(flow, **kw))

@@ -1,0 +1,40 @@
+"""Shared UDF invocation: build views, run the black box, return emissions.
+
+Used by the eager executor, the masked jit executor, and the SCA dummy runs —
+one code path so analysis and execution can never disagree on semantics.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+from .udf import Collector, GroupView, InputView, SegmentOps
+
+
+def run_map_udf(udf, columns: Mapping[str, object]) -> Collector:
+    out = Collector()
+    udf(InputView(columns), out)
+    return out
+
+
+def run_pair_udf(udf, left_cols: Mapping[str, object],
+                 right_cols: Mapping[str, object]) -> Collector:
+    """Cross/Match UDF over already-paired (aligned) left/right columns."""
+    out = Collector()
+    udf(InputView(left_cols), InputView(right_cols), out)
+    return out
+
+
+def run_kat_udf(udf, columns_sorted: Mapping[str, object], segops: SegmentOps,
+                key_fields: Sequence[str]) -> Collector:
+    out = Collector()
+    udf(GroupView(columns_sorted, segops, key_fields), out)
+    return out
+
+
+def run_cogroup_udf(udf, left_sorted, left_segops, right_sorted, right_segops,
+                    left_key, right_key) -> Collector:
+    out = Collector()
+    udf(GroupView(left_sorted, left_segops, left_key),
+        GroupView(right_sorted, right_segops, right_key), out)
+    return out

@@ -1,0 +1,382 @@
+"""jit-safe masked executor — flows under XLA static shapes.
+
+Stratosphere streams records of dynamic cardinality; XLA requires static
+shapes.  The adaptation (DESIGN.md §3.2): every intermediate data set is a
+`MaskedBatch` — fixed-capacity columns + a validity mask.  Filters flip mask
+bits; grouping uses sort + segment reductions with a static segment count;
+PK joins use sorted-search probes.  `compact()` re-packs valid rows to a
+smaller static capacity chosen by the optimizer's cardinality estimate.
+
+This is what lets a PACT flow run *inside* jit/shard_map — e.g. on-device
+record preprocessing fused ahead of a train step — which the paper's Java
+runtime could not express at all.
+
+Hot loops (segment reduction, sorted probe) route through the Pallas kernels
+in `repro.kernels` when `use_kernels=True` (TPU target; interpret-mode on
+CPU); the default jnp path is the oracle they are tested against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import invoke
+from .cost import estimate
+from .operators import (CoGroupOp, CrossOp, MapOp, MatchOp, Node, ReduceOp,
+                        Source)
+from .record import RecordBatch
+from .udf import JitSegmentOps
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MaskedBatch:
+    """Fixed-capacity struct-of-arrays + validity mask (a pytree)."""
+
+    columns: dict
+    valid: jnp.ndarray  # bool[capacity]
+
+    @property
+    def capacity(self) -> int:
+        return int(self.valid.shape[0])
+
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        return tuple(self.columns[n] for n in names) + (self.valid,), names
+
+    @classmethod
+    def tree_unflatten(cls, names, leaves):
+        return cls(columns=dict(zip(names, leaves[:-1])), valid=leaves[-1])
+
+    @staticmethod
+    def from_record_batch(b: RecordBatch, capacity: Optional[int] = None) -> "MaskedBatch":
+        b = b.to_numpy().compact()
+        n = b.capacity
+        cap = capacity or max(n, 1)
+        cols = {}
+        for f in b.fields:
+            v = np.asarray(b.columns[f])
+            pad = np.zeros((cap - n,) + v.shape[1:], dtype=v.dtype)
+            cols[f] = jnp.asarray(np.concatenate([v, pad]))
+        valid = jnp.asarray(np.arange(cap) < n)
+        return MaskedBatch(cols, valid)
+
+    def to_record_batch(self) -> RecordBatch:
+        cols = {k: np.asarray(v) for k, v in self.columns.items()}
+        return RecordBatch(cols, np.asarray(self.valid)).compact()
+
+    def compact(self, capacity: int) -> "MaskedBatch":
+        """Re-pack valid rows first and truncate/grow to `capacity`."""
+        order = jnp.argsort(~self.valid, stable=True)
+        cap = self.capacity
+
+        def take(v):
+            g = v[order]
+            if capacity <= cap:
+                return g[:capacity]
+            pad = jnp.zeros((capacity - cap,) + v.shape[1:], v.dtype)
+            return jnp.concatenate([g, pad])
+
+        cols = {k: take(v) for k, v in self.columns.items()}
+        valid = take(self.valid) if capacity <= cap else jnp.concatenate(
+            [self.valid[order], jnp.zeros(capacity - cap, bool)])
+        return MaskedBatch(cols, valid)
+
+
+def _concat(batches: Sequence[MaskedBatch]) -> MaskedBatch:
+    fields = batches[0].columns.keys()
+    cols = {f: jnp.concatenate([b.columns[f] for b in batches]) for f in fields}
+    return MaskedBatch(cols, jnp.concatenate([b.valid for b in batches]))
+
+
+def _project(cols: Mapping, schema, n: int) -> dict:
+    out = {}
+    for f in schema.fields:
+        v = jnp.asarray(cols[f])
+        if v.ndim == 0:
+            v = jnp.broadcast_to(v, (n,))
+        out[f] = v.astype(schema.dtype(f))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Grouping machinery (static shapes)
+# ---------------------------------------------------------------------------
+def _sort_by_key(b: MaskedBatch, key: Sequence[str]):
+    """Valid rows first, ordered by composite key.  Returns (sorted batch,
+    segment_ids, is_group_start)."""
+    keys = tuple(jnp.asarray(b.columns[k]) for k in key)
+    order = jnp.lexsort(tuple(reversed(keys)) + (~b.valid,))
+    cols = {f: v[order] for f, v in b.columns.items()}
+    valid = b.valid[order]
+    same = jnp.ones(b.capacity, bool)
+    for k in key:
+        kv = cols[k]
+        same = same & jnp.concatenate([jnp.zeros(1, bool), kv[1:] == kv[:-1]])
+    prev_valid = jnp.concatenate([jnp.zeros(1, bool), valid[:-1]])
+    is_start = valid & (~same | ~prev_valid)
+    seg = jnp.cumsum(is_start.astype(jnp.int32)) - 1
+    seg = jnp.maximum(seg, 0)
+    return MaskedBatch(cols, valid), seg, is_start
+
+
+def segment_reduce_backend(use_kernels: bool):
+    if not use_kernels:
+        return JitSegmentOps
+    from ..kernels import ops as kops
+
+    return kops.KernelSegmentOps
+
+
+# ---------------------------------------------------------------------------
+# Per-operator execution
+# ---------------------------------------------------------------------------
+def _exec_map(op: MapOp, b: MaskedBatch) -> MaskedBatch:
+    col = invoke.run_map_udf(op.udf, dict(b.columns))
+    parts = []
+    for em in col.emissions:
+        if em.builder is None:
+            continue
+        cols = _project(em.builder.columns(), op.out_schema, b.capacity)
+        valid = b.valid
+        if em.where is not None:
+            valid = valid & jnp.asarray(em.where).astype(bool)
+        parts.append(MaskedBatch(cols, valid))
+    if not parts:
+        return MaskedBatch(
+            {f: jnp.zeros(1, op.out_schema.dtype(f)) for f in op.out_schema.fields},
+            jnp.zeros(1, bool))
+    return _concat(parts)
+
+
+def _exec_reduce(op: ReduceOp, b: MaskedBatch, use_kernels: bool) -> MaskedBatch:
+    sb, seg, is_start = _sort_by_key(b, op.key)
+    nseg = b.capacity  # worst case: every valid row its own group
+    segcls = segment_reduce_backend(use_kernels)
+    segops = segcls(seg, nseg, record_valid=sb.valid)
+    col = invoke.run_kat_udf(op.udf, dict(sb.columns), segops, op.key)
+    ngroups = jnp.sum(is_start)
+    group_valid = jnp.arange(nseg) < ngroups
+
+    parts = []
+    for em in col.emissions:
+        if em.records:
+            cols = (em.builder.columns() if em.builder is not None
+                    else dict(sb.columns))
+            valid = sb.valid
+            if em.group_where is not None:
+                gw = jnp.asarray(em.group_where).astype(bool)
+                valid = valid & gw[seg]
+            parts.append(MaskedBatch(
+                _project(cols, op.out_schema, b.capacity), valid))
+        else:
+            cols = em.builder.columns()
+            valid = group_valid
+            if em.where is not None:
+                valid = valid & jnp.asarray(em.where).astype(bool)
+            parts.append(MaskedBatch(
+                _project(cols, op.out_schema, nseg), valid))
+    return _concat(parts)
+
+
+def _exec_match_pk(op: MatchOp, lb: MaskedBatch, rb: MaskedBatch,
+                   use_kernels: bool) -> MaskedBatch:
+    """Equi-join where the right side is unique on its key (PK side): each
+    left row matches at most one right row — sorted-search probe."""
+    rkeys = tuple(jnp.asarray(rb.columns[k]) for k in op.right_key)
+    order = jnp.lexsort(tuple(reversed(rkeys)) + (~rb.valid,))
+    rcols = {f: v[order] for f, v in rb.columns.items()}
+    rvalid = rb.valid[order]
+
+    # composite keys -> single sortable code via lexicographic pairing
+    def code(cols, names, valid):
+        c = None
+        for k in names:
+            v = jnp.asarray(cols[k]).astype(jnp.int64)
+            c = v if c is None else c * jnp.int64(1 << 31) + v
+        big = jnp.iinfo(jnp.int64).max
+        return jnp.where(valid, c, big)
+
+    rcode = code(rcols, op.right_key, rvalid)
+    rcode = jnp.sort(rcode)
+    lcode = code(lb.columns, op.left_key, lb.valid)
+
+    if use_kernels:
+        from ..kernels import ops as kops
+
+        pos = kops.sorted_probe(rcode, lcode)
+    else:
+        pos = jnp.searchsorted(rcode, lcode)
+    pos = jnp.clip(pos, 0, rb.capacity - 1)
+    hit = (rcode[pos] == lcode) & lb.valid
+
+    gathered = {f: v[pos] for f, v in rcols.items()}
+    col = invoke.run_pair_udf(op.udf, dict(lb.columns), gathered)
+    parts = []
+    for em in col.emissions:
+        if em.builder is None:
+            continue
+        valid = hit
+        if em.where is not None:
+            valid = valid & jnp.asarray(em.where).astype(bool)
+        parts.append(MaskedBatch(
+            _project(em.builder.columns(), op.out_schema, lb.capacity), valid))
+    return _concat(parts)
+
+
+def _exec_cross(op, lb: MaskedBatch, rb: MaskedBatch,
+                left_key=(), right_key=()) -> MaskedBatch:
+    """Full pairwise product (also used for small general equi-joins)."""
+    nl, nr = lb.capacity, rb.capacity
+    li = jnp.repeat(jnp.arange(nl), nr)
+    ri = jnp.tile(jnp.arange(nr), nl)
+    lcols = {f: v[li] for f, v in lb.columns.items()}
+    rcols = {f: v[ri] for f, v in rb.columns.items()}
+    valid = lb.valid[li] & rb.valid[ri]
+    for lk, rk in zip(left_key, right_key):
+        valid = valid & (lcols[lk] == rcols[rk])
+    col = invoke.run_pair_udf(op.udf, lcols, rcols)
+    parts = []
+    for em in col.emissions:
+        if em.builder is None:
+            continue
+        v = valid
+        if em.where is not None:
+            v = v & jnp.asarray(em.where).astype(bool)
+        parts.append(MaskedBatch(
+            _project(em.builder.columns(), op.out_schema, nl * nr), v))
+    return _concat(parts)
+
+
+def _exec_cogroup(op: CoGroupOp, lb: MaskedBatch, rb: MaskedBatch,
+                  use_kernels: bool) -> MaskedBatch:
+    """Align both sides on the union key domain with static shapes."""
+    nl, nr = lb.capacity, rb.capacity
+    # joint sort of all keys to build dense codes over the union domain
+    lkeys = [jnp.asarray(lb.columns[k]) for k in op.left_key]
+    rkeys = [jnp.asarray(rb.columns[k]) for k in op.right_key]
+    allkeys = [jnp.concatenate([a, b_]) for a, b_ in zip(lkeys, rkeys)]
+    allvalid = jnp.concatenate([lb.valid, rb.valid])
+    order = jnp.lexsort(tuple(reversed(allkeys)) + (~allvalid,))
+    sorted_keys = [k[order] for k in allkeys]
+    sorted_valid = allvalid[order]
+    same = jnp.ones(nl + nr, bool)
+    for k in sorted_keys:
+        same = same & jnp.concatenate([jnp.zeros(1, bool), k[1:] == k[:-1]])
+    prev_valid = jnp.concatenate([jnp.zeros(1, bool), sorted_valid[:-1]])
+    is_start = sorted_valid & (~same | ~prev_valid)
+    seg_sorted = jnp.maximum(jnp.cumsum(is_start.astype(jnp.int32)) - 1, 0)
+    inv = jnp.argsort(order)
+    seg_all = seg_sorted[inv]
+    lseg, rseg = seg_all[:nl], seg_all[nl:]
+    nseg = nl + nr
+    ngroups = jnp.sum(is_start)
+    group_valid = jnp.arange(nseg) < ngroups
+
+    # per-side segment-sorted order (first()/group scans need contiguity)
+    lord = jnp.lexsort((~lb.valid, lseg))
+    rord = jnp.lexsort((~rb.valid, rseg))
+    lcols = {f: v[lord] for f, v in lb.columns.items()}
+    rcols = {f: v[rord] for f, v in rb.columns.items()}
+    lseg, rseg = lseg[lord], rseg[rord]
+    lvalid, rvalid = lb.valid[lord], rb.valid[rord]
+
+    segcls = segment_reduce_backend(use_kernels)
+    lops = segcls(lseg, nseg, record_valid=lvalid)
+    rops = segcls(rseg, nseg, record_valid=rvalid)
+    col = invoke.run_cogroup_udf(op.udf, lcols, lops, rcols, rops,
+                                 op.left_key, op.right_key)
+    parts = []
+    for em in col.emissions:
+        if em.records:
+            raise NotImplementedError("CoGroup passthrough under jit")
+        valid = group_valid
+        if em.where is not None:
+            valid = valid & jnp.asarray(em.where).astype(bool)
+        parts.append(MaskedBatch(
+            _project(em.builder.columns(), op.out_schema, nseg), valid))
+    return _concat(parts)
+
+
+# ---------------------------------------------------------------------------
+# Flow execution
+# ---------------------------------------------------------------------------
+def execute_masked(root: Node, bindings: Mapping[str, MaskedBatch],
+                   use_kernels: bool = False,
+                   compact_slack: float = 2.0,
+                   compact: bool = True) -> MaskedBatch:
+    """Execute `root` on masked batches (traceable: call under jit).
+
+    `compact=True` re-packs intermediates to `estimate(node) * slack`
+    capacity (static — derived from the cost model at trace time), bounding
+    memory exactly the way the paper's optimizer uses cardinality hints.
+    """
+    stats_memo: dict = {}
+    memo: dict[int, MaskedBatch] = {}
+
+    def maybe_compact(node: Node, b: MaskedBatch) -> MaskedBatch:
+        if not compact:
+            return b
+        est = estimate(node, stats_memo).rows * compact_slack
+        cap = int(min(b.capacity, max(_round8(est), 8)))
+        if cap < b.capacity:
+            return b.compact(cap)
+        return b
+
+    def run(node: Node) -> MaskedBatch:
+        if id(node) in memo:
+            return memo[id(node)]
+        if isinstance(node, Source):
+            out = bindings[node.name]
+        elif isinstance(node, MapOp):
+            out = _exec_map(node, run(node.child))
+        elif isinstance(node, ReduceOp):
+            out = _exec_reduce(node, run(node.child), use_kernels)
+        elif isinstance(node, MatchOp):
+            lb, rb = run(node.left), run(node.right)
+            if node.hints.pk_side == "right":
+                out = _exec_match_pk(node, lb, rb, use_kernels)
+            elif node.hints.pk_side == "left":
+                from .reorder import commute as _commute
+
+                flipped = _commute(node)
+                out = _exec_match_pk(flipped, rb, lb, use_kernels)
+            else:
+                out = _exec_cross(node, lb, rb, node.left_key, node.right_key)
+        elif isinstance(node, CrossOp):
+            out = _exec_cross(node, run(node.left), run(node.right))
+        elif isinstance(node, CoGroupOp):
+            out = _exec_cogroup(node, run(node.left), run(node.right),
+                                use_kernels)
+        else:
+            raise TypeError(type(node).__name__)
+        out = maybe_compact(node, out)
+        memo[id(node)] = out
+        return out
+
+    return run(root)
+
+
+def _round8(x: float) -> int:
+    return int(np.ceil(max(x, 1.0) / 8.0) * 8)
+
+
+def run_flow_jit(root: Node, bindings: Mapping[str, RecordBatch],
+                 capacities: Optional[Mapping[str, int]] = None,
+                 use_kernels: bool = False) -> RecordBatch:
+    """Convenience: bind numpy batches, jit-execute, return a RecordBatch."""
+    caps = capacities or {}
+    masked = {name: MaskedBatch.from_record_batch(b, caps.get(name))
+              for name, b in bindings.items()}
+
+    @functools.partial(jax.jit, static_argnums=())
+    def go(mb):
+        return execute_masked(root, mb, use_kernels=use_kernels)
+
+    return go(masked).to_record_batch()

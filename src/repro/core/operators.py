@@ -1,0 +1,299 @@
+"""PACT operator tree nodes (Sec. 2.3).
+
+Five second-order functions — Map, Reduce (KAT), Cross, Match, CoGroup (KAT)
+— plus Source.  Nodes are immutable; rewrites build new trees sharing
+subtrees.  Every node carries its resolved output schema, so the enumerator
+and the conflict checks can reason about which attributes live where
+(`attrs(subtree)` in Theorems 3/4 and Lemma 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .record import Schema
+from .udf import Card, KatEmit, UdfProperties
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass(frozen=True)
+class Hints:
+    """Per-operator cost hints (paper Sec. 7.1: 'Average Number of Records
+    Emitted per UDF Call', 'CPU Cost per UDF Call', 'Number of Distinct
+    Values per Key-Set', PK/FK knowledge)."""
+
+    selectivity: Optional[float] = None      # emitted/input records (RAT)
+    distinct_keys: Optional[int] = None      # KAT ops
+    cpu_flops_per_record: float = 32.0
+    join_fanout: Optional[float] = None      # avg matches per probe record
+    pk_side: Optional[str] = None            # 'left'|'right': unique-key side
+    group_selectivity: Optional[float] = None  # KAT group-filter survival rate
+
+
+class Node:
+    """Base class; subclasses are frozen dataclasses."""
+
+    name: str
+    out_schema: Schema
+
+    @property
+    def children(self) -> tuple:
+        return ()
+
+    @property
+    def is_unary(self) -> bool:
+        return len(self.children) == 1
+
+    @property
+    def is_binary(self) -> bool:
+        return len(self.children) == 2
+
+    @property
+    def is_kat(self) -> bool:
+        return isinstance(self, (ReduceOp, CoGroupOp))
+
+    def with_children(self, *children: "Node") -> "Node":
+        raise NotImplementedError
+
+    def attrs(self) -> frozenset:
+        return frozenset(self.out_schema.fields)
+
+    # -- pretty printing -----------------------------------------------------
+    def pretty(self, indent: int = 0) -> str:
+        pad = "  " * indent
+        line = f"{pad}{type(self).__name__}[{self.name}]"
+        if isinstance(self, (ReduceOp, CoGroupOp, MatchOp)):
+            line += f" key={getattr(self, 'key', getattr(self, 'left_key', None))}"
+        lines = [line]
+        for c in self.children:
+            lines.append(c.pretty(indent + 1))
+        return "\n".join(lines)
+
+    def iter_nodes(self):
+        yield self
+        for c in self.children:
+            yield from c.iter_nodes()
+
+    def op_names(self) -> tuple:
+        return tuple(n.name for n in self.iter_nodes())
+
+    def canonical(self) -> str:
+        """Structural key for memo tables / plan dedup."""
+        if not self.children:
+            return self.name
+        inner = ",".join(c.canonical() for c in self.children)
+        return f"{self.name}({inner})"
+
+
+@dataclasses.dataclass(frozen=True)
+class Source(Node):
+    name: str
+    out_schema: Schema
+    num_records: int = 1000
+    partitioned_on: Optional[tuple] = None
+    sorted_on: Optional[tuple] = None
+
+    def with_children(self, *children: Node) -> "Source":
+        assert not children
+        return self
+
+
+def _check_fields(name: str, need: Sequence[str], have: frozenset, what: str):
+    missing = [f for f in need if f not in have]
+    if missing:
+        raise ValueError(f"operator {name!r}: {what} fields {missing} not in input schema")
+
+
+def _rat_out_schema(name: str, props: UdfProperties, in_schema: Schema,
+                    add_dtypes: dict) -> Schema:
+    if props.implicit_copy:
+        fields = [f for f in in_schema.fields if f not in props.drops]
+    else:
+        carried = (props.writes | props.copies) - props.adds - props.drops
+        fields = [f for f in in_schema.fields if f in carried]
+    dtypes = {f: in_schema.dtypes[f] for f in fields}
+    for f in sorted(props.adds):
+        if f in dtypes:
+            raise ValueError(f"operator {name!r} adds existing attribute {f!r}")
+        fields.append(f)
+        dtypes[f] = np.dtype(add_dtypes.get(f, np.float32))
+    return Schema(tuple(fields), dtypes)
+
+
+@dataclasses.dataclass(frozen=True)
+class MapOp(Node):
+    name: str
+    udf: object
+    props: UdfProperties
+    child: Node
+    hints: Hints = dataclasses.field(default_factory=Hints)
+    add_dtypes: dict = dataclasses.field(default_factory=dict)
+    out_schema: Schema = None
+
+    def __post_init__(self):
+        _check_fields(self.name, sorted(self.props.reads | (self.props.writes - self.props.adds)),
+                      self.child.attrs(), "read/write")
+        object.__setattr__(self, "out_schema",
+                           _rat_out_schema(self.name, self.props,
+                                           self.child.out_schema, self.add_dtypes))
+
+    @property
+    def children(self):
+        return (self.child,)
+
+    def with_children(self, *children: Node) -> "MapOp":
+        (c,) = children
+        return dataclasses.replace(self, child=c)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReduceOp(Node):
+    name: str
+    udf: object
+    key: tuple
+    props: UdfProperties
+    child: Node
+    hints: Hints = dataclasses.field(default_factory=Hints)
+    add_dtypes: dict = dataclasses.field(default_factory=dict)
+    out_schema: Schema = None
+
+    def __post_init__(self):
+        _check_fields(self.name, self.key, self.child.attrs(), "key")
+        _check_fields(self.name, sorted(self.props.reads | (self.props.writes - self.props.adds)),
+                      self.child.attrs() | frozenset(self.key), "read/write")
+        object.__setattr__(self, "out_schema",
+                           _rat_out_schema(self.name, self.props,
+                                           self.child.out_schema, self.add_dtypes))
+
+    @property
+    def children(self):
+        return (self.child,)
+
+    def with_children(self, *children: Node) -> "ReduceOp":
+        (c,) = children
+        return dataclasses.replace(self, child=c)
+
+
+def _binary_out_schema(name: str, props: UdfProperties, left: Schema, right: Schema,
+                       add_dtypes: dict) -> Schema:
+    joint = left.union(right)
+    return _rat_out_schema(name, props, joint, add_dtypes)
+
+
+@dataclasses.dataclass(frozen=True)
+class MatchOp(Node):
+    name: str
+    udf: object
+    left_key: tuple
+    right_key: tuple
+    props: UdfProperties
+    left: Node
+    right: Node
+    hints: Hints = dataclasses.field(default_factory=Hints)
+    add_dtypes: dict = dataclasses.field(default_factory=dict)
+    out_schema: Schema = None
+
+    def __post_init__(self):
+        _check_fields(self.name, self.left_key, self.left.attrs(), "left key")
+        _check_fields(self.name, self.right_key, self.right.attrs(), "right key")
+        if len(self.left_key) != len(self.right_key):
+            raise ValueError(f"match {self.name!r}: key arity mismatch")
+        object.__setattr__(self, "out_schema",
+                           _binary_out_schema(self.name, self.props,
+                                              self.left.out_schema, self.right.out_schema,
+                                              self.add_dtypes))
+
+    @property
+    def children(self):
+        return (self.left, self.right)
+
+    def with_children(self, *children: Node) -> "MatchOp":
+        l, r = children
+        return dataclasses.replace(self, left=l, right=r)
+
+    def key_attrs(self) -> frozenset:
+        return frozenset(self.left_key) | frozenset(self.right_key)
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossOp(Node):
+    name: str
+    udf: object
+    props: UdfProperties
+    left: Node
+    right: Node
+    hints: Hints = dataclasses.field(default_factory=Hints)
+    add_dtypes: dict = dataclasses.field(default_factory=dict)
+    out_schema: Schema = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "out_schema",
+                           _binary_out_schema(self.name, self.props,
+                                              self.left.out_schema, self.right.out_schema,
+                                              self.add_dtypes))
+
+    @property
+    def children(self):
+        return (self.left, self.right)
+
+    def with_children(self, *children: Node) -> "CrossOp":
+        l, r = children
+        return dataclasses.replace(self, left=l, right=r)
+
+    def key_attrs(self) -> frozenset:
+        return frozenset()
+
+
+@dataclasses.dataclass(frozen=True)
+class CoGroupOp(Node):
+    name: str
+    udf: object
+    left_key: tuple
+    right_key: tuple
+    props: UdfProperties
+    left: Node
+    right: Node
+    hints: Hints = dataclasses.field(default_factory=Hints)
+    add_dtypes: dict = dataclasses.field(default_factory=dict)
+    out_schema: Schema = None
+
+    def __post_init__(self):
+        _check_fields(self.name, self.left_key, self.left.attrs(), "left key")
+        _check_fields(self.name, self.right_key, self.right.attrs(), "right key")
+        object.__setattr__(self, "out_schema",
+                           _binary_out_schema(self.name, self.props,
+                                              self.left.out_schema, self.right.out_schema,
+                                              self.add_dtypes))
+
+    @property
+    def children(self):
+        return (self.left, self.right)
+
+    def with_children(self, *children: Node) -> "CoGroupOp":
+        l, r = children
+        return dataclasses.replace(self, left=l, right=r)
+
+    def key_attrs(self) -> frozenset:
+        return frozenset(self.left_key) | frozenset(self.right_key)
+
+
+def flow_valid(node: Node) -> bool:
+    """Defense-in-depth: every operator's reads/writes/keys must be resolvable
+    against its (possibly rewritten) input schemas."""
+    try:
+        rebuild(node)
+        return True
+    except (ValueError, KeyError):
+        return False
+
+
+def rebuild(node: Node) -> Node:
+    """Re-run schema propagation bottom-up (validates a rewritten tree)."""
+    if not node.children:
+        return node
+    return node.with_children(*[rebuild(c) for c in node.children])

@@ -1,0 +1,336 @@
+"""Physical optimization: shipping + local strategies with interesting
+properties (paper Secs. 2.1, 6, 7.1 — the Stratosphere/Nephele cost layer).
+
+For every logical plan the physical optimizer chooses, per operator:
+
+* a shipping strategy per input — `forward` (no communication), `partition`
+  (hash repartition = `all_to_all` on the mesh data axis), or `broadcast`
+  (replicate = `all_gather`);
+* a local strategy — `sort` / `reuse-sort` for KAT grouping and sort-merge
+  joins, `probe` for broadcast joins (sorted-probe: TPU-idiomatic stand-in
+  for Nephele's hybrid-hash, see DESIGN.md §3).
+
+Interesting properties (partitioning co-location classes + sort order)
+propagate bottom-up in a Volcano-style dynamic program: `candidates()`
+returns the Pareto set {property → cheapest sub-plan}, so a more expensive
+sub-plan survives only if it offers a property some consumer might exploit —
+exactly the integration sketched in the paper's Sec. 6 closing paragraphs.
+
+Cost model: wall-clock seconds per term on the TARGET fabric
+(`repro.hw.CHIP`, TPU v5e by default):
+
+    net: shuffled/broadcast bytes over per-chip ICI link bandwidth
+    mem: input+output bytes over per-chip HBM bandwidth
+    cpu: UDF flops + sort/probe flops over the VPU's scalar throughput
+
+The paper's disk-I/O term becomes the HBM term (DESIGN.md §3.4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Optional
+
+from .. import hw
+from .cost import Stats, estimate, sort_flops
+from .operators import (CoGroupOp, CrossOp, MapOp, MatchOp, Node, ReduceOp,
+                        Source)
+from .reorder import eff_writes
+
+UDF_VECTOR_FLOPS = 4e12  # VPU-class throughput for record-wise UDF work
+
+
+# ---------------------------------------------------------------------------
+# Physical data properties & cost vectors
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Props:
+    """Partitioning co-location classes + sort order of a physical stream."""
+
+    partitions: frozenset = frozenset()   # frozenset[frozenset[str]]
+    sort: tuple = ()
+
+    def partitioned_on(self, key: frozenset) -> bool:
+        """Is every key-group co-located? True iff some co-location class is
+        a subset of `key` (equal key ⇒ equal class ⇒ same worker)."""
+        return any(g <= key for g in self.partitions if g)
+
+    def sorted_on(self, key: frozenset) -> bool:
+        return len(key) > 0 and set(self.sort[:len(key)]) == set(key)
+
+    def dominates(self, other: "Props") -> bool:
+        sort_ok = other.sort == self.sort[:len(other.sort)]
+        return other.partitions <= self.partitions and sort_ok
+
+
+@dataclasses.dataclass(frozen=True)
+class CostVec:
+    net: float = 0.0
+    mem: float = 0.0
+    cpu: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return self.net + self.mem + self.cpu
+
+    def __add__(self, o: "CostVec") -> "CostVec":
+        return CostVec(self.net + o.net, self.mem + o.mem, self.cpu + o.cpu)
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    """Parallel execution context (degree of parallelism + fabric)."""
+
+    dop: int = 32
+    chip: hw.ChipSpec = hw.CHIP
+
+    @property
+    def link_bw(self) -> float:
+        return self.chip.ici_link_bandwidth
+
+    @property
+    def hbm_bw(self) -> float:
+        return self.chip.hbm_bandwidth
+
+
+@dataclasses.dataclass(frozen=True)
+class PhysPlan:
+    node: Node
+    inputs: tuple = ()
+    ship: tuple = ()            # per input: 'forward'|'partition'|'broadcast'
+    local: str = "scan"
+    props: Props = Props()
+    node_cost: CostVec = CostVec()
+
+    @property
+    def total_cost(self) -> CostVec:
+        c = self.node_cost
+        for i in self.inputs:
+            c = c + i.total_cost
+        return c
+
+    def pretty(self, indent: int = 0) -> str:
+        pad = "  " * indent
+        ship = "" if not self.ship else f" ship={list(self.ship)}"
+        line = (f"{pad}{type(self.node).__name__}[{self.node.name}]"
+                f"{ship} local={self.local} "
+                f"cost(net={self.node_cost.net:.2e},mem={self.node_cost.mem:.2e},"
+                f"cpu={self.node_cost.cpu:.2e})")
+        return "\n".join([line] + [i.pretty(indent + 1) for i in self.inputs])
+
+
+# ---------------------------------------------------------------------------
+# Cost primitives
+# ---------------------------------------------------------------------------
+def _t_shuffle(bytes_total: float, ctx: Ctx) -> float:
+    """all_to_all hash repartition: each worker sends its (p-1)/p share."""
+    p = ctx.dop
+    return (bytes_total / p) * (p - 1) / p / ctx.link_bw
+
+
+def _t_broadcast(bytes_total: float, ctx: Ctx) -> float:
+    """all_gather replicate: each worker receives the (p-1)/p remainder."""
+    p = ctx.dop
+    return bytes_total * (p - 1) / p / ctx.link_bw
+
+
+def _t_mem(bytes_in: float, bytes_out: float, ctx: Ctx) -> float:
+    return (bytes_in + bytes_out) / (ctx.dop * ctx.hbm_bw)
+
+
+def _t_cpu(flops: float, ctx: Ctx) -> float:
+    return flops / (ctx.dop * UDF_VECTOR_FLOPS)
+
+
+def _preserved(props: Props, node: Node) -> Props:
+    """Input properties that survive a record-wise operator (writes destroy)."""
+    w = eff_writes(node)
+    parts = frozenset(g for g in props.partitions if not (g & w))
+    sort = []
+    for a in props.sort:
+        if a in w or a not in node.attrs():
+            break
+        sort.append(a)
+    parts = frozenset(g for g in parts if g <= node.attrs())
+    return Props(partitions=parts, sort=tuple(sort))
+
+
+# ---------------------------------------------------------------------------
+# Candidate generation per operator
+# ---------------------------------------------------------------------------
+def _prune(cands: list[PhysPlan]) -> dict[Props, PhysPlan]:
+    by_prop: dict[Props, PhysPlan] = {}
+    for c in cands:
+        cur = by_prop.get(c.props)
+        if cur is None or c.total_cost.total < cur.total_cost.total:
+            by_prop[c.props] = c
+    # drop entries dominated by a cheaper-or-equal entry with better props
+    out: dict[Props, PhysPlan] = {}
+    items = list(by_prop.items())
+    for p, plan in items:
+        dominated = any(
+            q.dominates(p) and other.total_cost.total <= plan.total_cost.total
+            and q != p
+            for q, other in items)
+        if not dominated:
+            out[p] = plan
+    return out
+
+
+def candidates(node: Node, ctx: Ctx, memo: Optional[dict] = None,
+               stats_memo: Optional[dict] = None) -> dict[Props, PhysPlan]:
+    if memo is None:
+        memo = {}
+    if stats_memo is None:
+        stats_memo = {}
+    key = node.canonical()
+    if key in memo:
+        return memo[key]
+
+    st = estimate(node, stats_memo)
+    out: list[PhysPlan] = []
+
+    if isinstance(node, Source):
+        parts = frozenset({frozenset(node.partitioned_on)}) \
+            if node.partitioned_on else frozenset()
+        props = Props(partitions=parts, sort=node.sorted_on or ())
+        out.append(PhysPlan(node=node, props=props,
+                            node_cost=CostVec(mem=_t_mem(st.bytes, 0, ctx))))
+
+    elif isinstance(node, MapOp):
+        cin = estimate(node.child, stats_memo)
+        for iprops, iplan in candidates(node.child, ctx, memo, stats_memo).items():
+            cost = CostVec(
+                mem=_t_mem(cin.bytes, st.bytes, ctx),
+                cpu=_t_cpu(cin.rows * node.hints.cpu_flops_per_record, ctx))
+            out.append(PhysPlan(node=node, inputs=(iplan,), ship=("forward",),
+                                local="scan", props=_preserved(iprops, node),
+                                node_cost=cost))
+
+    elif isinstance(node, ReduceOp):
+        cin = estimate(node.child, stats_memo)
+        kset = frozenset(node.key)
+        for iprops, iplan in candidates(node.child, ctx, memo, stats_memo).items():
+            options = []
+            if iprops.partitioned_on(kset):
+                options.append(("forward", 0.0, iprops.partitions))
+            options.append(("partition", _t_shuffle(cin.bytes, ctx),
+                            frozenset({kset})))
+            for ship, net, parts in options:
+                presorted = ship == "forward" and iprops.sorted_on(kset)
+                local = "reuse-sort" if presorted else "sort"
+                cpu = cin.rows * node.hints.cpu_flops_per_record
+                if not presorted:
+                    cpu += sort_flops(cin.rows / ctx.dop) * ctx.dop
+                cost = CostVec(net=net,
+                               mem=_t_mem(cin.bytes, st.bytes, ctx),
+                               cpu=_t_cpu(cpu, ctx))
+                props = Props(partitions=frozenset(g for g in parts
+                                                   if g <= node.attrs()),
+                              sort=tuple(k for k in node.key
+                                         if k in node.attrs()))
+                out.append(PhysPlan(node=node, inputs=(iplan,), ship=(ship,),
+                                    local=local, props=props, node_cost=cost))
+
+    elif isinstance(node, (MatchOp, CrossOp)):
+        ls = estimate(node.left, stats_memo)
+        rs = estimate(node.right, stats_memo)
+        lcands = candidates(node.left, ctx, memo, stats_memo)
+        rcands = candidates(node.right, ctx, memo, stats_memo)
+        is_match = isinstance(node, MatchOp)
+        lk = frozenset(node.left_key) if is_match else frozenset()
+        rk = frozenset(node.right_key) if is_match else frozenset()
+        pair_cpu = st.rows * node.hints.cpu_flops_per_record
+
+        for (lp, lplan), (rp, rplan) in itertools.product(
+                lcands.items(), rcands.items()):
+            if is_match:
+                # (A) repartition/forward both sides, sort-merge locally
+                lship = "forward" if lp.partitioned_on(lk) else "partition"
+                rship = "forward" if rp.partitioned_on(rk) else "partition"
+                net = (0.0 if lship == "forward" else _t_shuffle(ls.bytes, ctx)) \
+                    + (0.0 if rship == "forward" else _t_shuffle(rs.bytes, ctx))
+                cpu = pair_cpu
+                lsorted = lship == "forward" and lp.sorted_on(lk)
+                rsorted = rship == "forward" and rp.sorted_on(rk)
+                if not lsorted:
+                    cpu += sort_flops(ls.rows / ctx.dop) * ctx.dop
+                if not rsorted:
+                    cpu += sort_flops(rs.rows / ctx.dop) * ctx.dop
+                local = "reuse-sort" if (lsorted and rsorted) else "sort-merge"
+                out_sort = []
+                for k in node.left_key:
+                    if k not in node.attrs():
+                        break
+                    out_sort.append(k)
+                props = Props(partitions=frozenset(g for g in (lk, rk)
+                                                   if g <= node.attrs()),
+                              sort=tuple(out_sort))
+                cost = CostVec(net=net,
+                               mem=_t_mem(ls.bytes + rs.bytes, st.bytes, ctx),
+                               cpu=_t_cpu(cpu, ctx))
+                out.append(PhysPlan(node=node, inputs=(lplan, rplan),
+                                    ship=(lship, rship), local=local,
+                                    props=props, node_cost=cost))
+            # (B)/(C) broadcast one side, probe in the other side's order —
+            # preserves the forwarded side's partitioning & sort (the Q15
+            # physical flip in the paper's Sec. 7.3).
+            for bc_side in (0, 1):
+                bst, fst = (rs, ls) if bc_side == 1 else (ls, rs)
+                fprops = lp if bc_side == 1 else rp
+                net = _t_broadcast(bst.bytes, ctx)
+                probe_rows = fst.rows / ctx.dop
+                cpu = pair_cpu + sort_flops(bst.rows) * ctx.dop
+                if is_match:
+                    cpu += probe_rows * max(1.0, math.log2(max(bst.rows, 2.0))) \
+                        * ctx.dop
+                cost = CostVec(net=net,
+                               mem=_t_mem(ls.bytes + rs.bytes * ctx.dop
+                                          if bc_side == 1 else
+                                          rs.bytes + ls.bytes * ctx.dop,
+                                          st.bytes, ctx),
+                               cpu=_t_cpu(cpu, ctx))
+                ship = ("forward", "broadcast") if bc_side == 1 \
+                    else ("broadcast", "forward")
+                out.append(PhysPlan(
+                    node=node, inputs=(lplan, rplan), ship=ship, local="probe",
+                    props=_preserved(fprops, node), node_cost=cost))
+
+    elif isinstance(node, CoGroupOp):
+        ls = estimate(node.left, stats_memo)
+        rs = estimate(node.right, stats_memo)
+        lk, rk = frozenset(node.left_key), frozenset(node.right_key)
+        for (lp, lplan), (rp, rplan) in itertools.product(
+                candidates(node.left, ctx, memo, stats_memo).items(),
+                candidates(node.right, ctx, memo, stats_memo).items()):
+            lship = "forward" if lp.partitioned_on(lk) else "partition"
+            rship = "forward" if rp.partitioned_on(rk) else "partition"
+            net = (0.0 if lship == "forward" else _t_shuffle(ls.bytes, ctx)) \
+                + (0.0 if rship == "forward" else _t_shuffle(rs.bytes, ctx))
+            cpu = (ls.rows + rs.rows) * node.hints.cpu_flops_per_record \
+                + sort_flops((ls.rows + rs.rows) / ctx.dop) * ctx.dop
+            props = Props(partitions=frozenset({g for g in (lk, rk)
+                                                if g <= node.attrs()}))
+            cost = CostVec(net=net,
+                           mem=_t_mem(ls.bytes + rs.bytes, st.bytes, ctx),
+                           cpu=_t_cpu(cpu, ctx))
+            out.append(PhysPlan(node=node, inputs=(lplan, rplan),
+                                ship=(lship, rship), local="sort",
+                                props=props, node_cost=cost))
+    else:
+        raise TypeError(type(node).__name__)
+
+    pruned = _prune(out)
+    memo[key] = pruned
+    return pruned
+
+
+def best_physical(flow: Node, ctx: Optional[Ctx] = None,
+                  memo: Optional[dict] = None,
+                  stats_memo: Optional[dict] = None) -> PhysPlan:
+    """Cheapest physical plan for one logical flow."""
+    ctx = ctx or Ctx()
+    cands = candidates(flow, ctx, memo, stats_memo)
+    return min(cands.values(), key=lambda p: p.total_cost.total)

@@ -1,0 +1,412 @@
+"""Reordering conditions (paper Sec. 4) + local rewrite rules.
+
+The optimizer never looks inside a UDF: every decision below is made from the
+`UdfProperties` (read/write sets, emission cardinality, KGP) plus the
+operator's keys and schemas.
+
+Effective sets
+--------------
+We widen the SCA-estimated sets with schema-level facts so conflicts remain
+conservative regardless of how the properties were obtained:
+
+* reads of a KAT operator / Match include its key attributes (the paper's
+  conceptual ``f'`` transformation, Sec. 4.3.1);
+* attributes present in the input schema but absent from the output were
+  projected away — projecting conflicts with any reader, so they join the
+  write set;
+* newly-created attributes (schema diff) join the write set (Def. 2 case 1).
+
+Rewrite rules (each returns a rewritten tree or None):
+
+* ``swap_unary``            Map/Reduce over Map/Reduce            (Thm 1, 2)
+* ``push_unary_into_binary``  unary over Match/Cross/CoGroup → into one side
+                              (Thm 3, 4 + Lemma-1 machinery + tagged union)
+* ``pull_unary_from_binary``  inverse of the above
+* ``rotate``                binary-binary associativity           (Lemma 1)
+* ``commute``               Match/Cross/CoGroup argument swap
+
+Every rewrite is finally validated by re-running schema propagation
+(`rebuild`) — defense-in-depth mirroring the paper's safety property.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .operators import (CoGroupOp, CrossOp, MapOp, MatchOp, Node, ReduceOp,
+                        Source, rebuild)
+from .udf import Card, KatEmit, UdfProperties
+
+
+# ---------------------------------------------------------------------------
+# Effective read/write sets
+# ---------------------------------------------------------------------------
+def node_keys(node: Node) -> frozenset:
+    if isinstance(node, ReduceOp):
+        return frozenset(node.key)
+    if isinstance(node, (MatchOp, CoGroupOp)):
+        return frozenset(node.left_key) | frozenset(node.right_key)
+    return frozenset()
+
+
+def input_attrs(node: Node) -> frozenset:
+    s: set = set()
+    for c in node.children:
+        s |= c.attrs()
+    return frozenset(s)
+
+
+def eff_reads(node: Node) -> frozenset:
+    return node.props.reads | node_keys(node)
+
+
+def eff_writes(node: Node) -> frozenset:
+    inp, out = input_attrs(node), node.attrs()
+    return node.props.writes | (inp - out) | (out - inp)
+
+
+def roc(a: Node, b: Node) -> bool:
+    """Read-Only Conflict condition (Def. 4) on effective sets."""
+    ra, wa = eff_reads(a), eff_writes(a)
+    rb, wb = eff_reads(b), eff_writes(b)
+    return not (ra & wb) and not (wa & rb) and not (wa & wb)
+
+
+def kgp(node: Node, key: frozenset) -> bool:
+    """Key Group Preservation (Def. 5) of `node` w.r.t. attribute set `key`.
+
+    RAT cases delegate to the UDF properties (|f(r)|=1, or a filter whose
+    decision fields lie within `key`).  A KAT *passthrough* operator emits
+    or drops whole own-key groups: Def. 5 case 2 holds for any `key` that
+    refines its own grouping (own_key ⊆ key ⇒ every key-group lies inside
+    one own-group and is kept or dropped atomically).
+    """
+    key = frozenset(key)
+    p = node.props
+    if p.kat_emit is KatEmit.PASSTHROUGH:
+        return True
+    if p.kat_emit is KatEmit.PASSTHROUGH_FILTER:
+        own = node_keys(node)
+        return own <= key
+    return p.satisfies_kgp(key)
+
+
+def _is_unary_op(n: Node) -> bool:
+    return isinstance(n, (MapOp, ReduceOp))
+
+
+def _is_binary_op(n: Node) -> bool:
+    return isinstance(n, (MatchOp, CrossOp, CoGroupOp))
+
+
+def _valid(tree: Optional[Node], like: Optional[Node] = None) -> Optional[Node]:
+    """Re-run schema propagation; additionally require the rewritten subtree
+    to expose the SAME attribute set as the original (`like`) — a projecting
+    operator moved across a binary op would otherwise silently change the
+    plan's output schema (e.g. a keys()-Reduce pulled above a join)."""
+    if tree is None:
+        return None
+    try:
+        rebuilt = rebuild(tree)
+    except (ValueError, KeyError):
+        return None
+    if like is not None and rebuilt.attrs() != like.attrs():
+        return None
+    return rebuilt
+
+
+# ---------------------------------------------------------------------------
+# Unary-unary swap (Theorems 1 & 2 + Reduce-Reduce)
+# ---------------------------------------------------------------------------
+def _changes_schema(op: Node) -> bool:
+    return input_attrs(op) != op.attrs()
+
+
+def unary_reorderable(r: Node, s: Node) -> bool:
+    """Can unary `r` (currently above) and unary `s` (below) be exchanged?"""
+    if not (_is_unary_op(r) and _is_unary_op(s)):
+        return False
+    if not roc(r, s):
+        return False
+    # A schema-reflecting UDF must keep its exact input schema (DESIGN.md §3):
+    # swapping past a schema-changing neighbour would alter its behaviour.
+    if r.props.schema_dependent and _changes_schema(s):
+        return False
+    if s.props.schema_dependent and _changes_schema(r):
+        return False
+    # Theorem 2 / Reduce-Reduce: every KAT operator's key groups must be
+    # preserved by the other operator.
+    if isinstance(r, ReduceOp) and not kgp(s, frozenset(r.key)):
+        return False
+    if isinstance(s, ReduceOp) and not kgp(r, frozenset(s.key)):
+        return False
+    return True
+
+
+def swap_unary(r: Node, s: Node) -> Optional[Node]:
+    """`r(s(X))` → `s(r(X))` when Theorem 1/2 conditions hold."""
+    if not unary_reorderable(r, s):
+        return None
+    x = s.children[0]
+    return _valid(s.with_children(r.with_children(x)), like=r)
+
+
+# ---------------------------------------------------------------------------
+# Unary ↔ binary (Theorems 3 & 4, tagged-union rules, invariant grouping)
+# ---------------------------------------------------------------------------
+def _side_key(b: Node, side: int) -> frozenset:
+    if isinstance(b, (MatchOp, CoGroupOp)):
+        return frozenset(b.left_key if side == 0 else b.right_key)
+    return frozenset()
+
+
+def _push_conditions(u: Node, b: Node, side: int) -> bool:
+    """Shared guards for moving unary `u` between 'above b' and 'side of b'."""
+    if not (_is_unary_op(u) and _is_binary_op(b)):
+        return False
+    if u.props.schema_dependent:
+        return False  # moving across a binary op always changes the schema
+    other = b.children[1 - side]
+    this = b.children[side]
+    refs_u = eff_reads(u) | eff_writes(u)
+    # Theorem 3 / Lemma 1: u must not touch the other side's attributes.
+    if refs_u & other.attrs():
+        return False
+    # u must also be expressible against this side alone.
+    if not (eff_reads(u) <= this.attrs() and
+            (eff_writes(u) - u.props.adds) <= this.attrs()):
+        return False
+    # ROC with the binary operator's conceptual f' (keys are reads).
+    if not roc(u, b):
+        return False
+
+    if isinstance(u, MapOp):
+        if isinstance(b, CoGroupOp):
+            # CoGroup ≡ Reduce over tagged union: Theorem 2 applies — the Map
+            # must preserve key groups of the CoGroup key on its side.
+            return kgp(u, _side_key(b, side))
+        if isinstance(b, (MatchOp, CrossOp)):
+            return True  # RAT: Theorem 1 + Theorem 3 suffice
+        return False
+
+    if isinstance(u, ReduceOp):
+        rkey = frozenset(u.key)
+        if isinstance(b, MatchOp):
+            # Invariant grouping (Sec. 4.3.2): Reduce key must contain the
+            # match key of its side, and the other side must be the PK side of
+            # a PK-FK join so key groups survive the join intact.
+            mkey = frozenset(b.left_key if side == 0 else b.right_key)
+            pk = b.hints.pk_side
+            pk_other = (pk == ("right" if side == 0 else "left"))
+            return mkey <= rkey and pk_other
+        if isinstance(b, CrossOp):
+            # Theorem 4: the whole other input must be functionally constant
+            # per group — only safe when the Reduce key covers all of this
+            # side's join-relevant attrs AND the other side is a single record.
+            return isinstance(other, Source) and other.num_records == 1
+        return False
+    return False
+
+
+def _extend_reduce(u: ReduceOp, extra: frozenset) -> ReduceOp:
+    """Non-intrusive UDF extension (paper Sec. 4.3.2 invariant grouping):
+    wrap the Reduce UDF so per-group emissions additionally pass through the
+    `extra` attributes as group-firsts.  Sound ONLY when every attribute in
+    `extra` is group-constant — the caller guarantees this via the PK-join
+    guard.  The wrapper records the original so a later push-down unwraps."""
+    orig_udf, orig_props = u.udf, u.props
+    extra = frozenset(extra)
+
+    def extended(g, out):
+        from .udf import Collector
+
+        proxy = Collector()
+        orig_udf(g, proxy)
+        for em in proxy.emissions:
+            if not em.records and em.builder is not None:
+                for f in extra:
+                    if f not in em.builder.columns():
+                        em.builder.set(f, g.first_of(f))
+                    em.builder.set_fields.discard(f)  # pass-through, not write
+            out.emissions.append(em)
+
+    extended.__name__ = getattr(orig_udf, "__name__", "udf") + "_ext"
+    extended.__reduce_extension__ = (orig_udf, orig_props, extra)
+    props = dataclasses.replace(
+        orig_props,
+        writes=orig_props.writes - extra,
+        drops=orig_props.drops - extra,
+        copies=orig_props.copies | extra)
+    return dataclasses.replace(u, udf=extended, props=props, out_schema=None)
+
+
+def _strip_reduce_extension(u: ReduceOp, other_attrs: frozenset):
+    """Inverse of `_extend_reduce` when pushing back below the join."""
+    ext = getattr(u.udf, "__reduce_extension__", None)
+    if ext is None:
+        return u
+    orig_udf, orig_props, extra = ext
+    if not (extra <= other_attrs):
+        return u
+    return dataclasses.replace(u, udf=orig_udf, props=orig_props,
+                               out_schema=None)
+
+
+def push_unary_into_binary(u: Node, b: Node, side: int) -> Optional[Node]:
+    """`u(b(L, R))` → `b(u(L), R)` (side=0) or `b(L, u(R))` (side=1)."""
+    original = u
+    if isinstance(u, ReduceOp):
+        u = _strip_reduce_extension(u, b.children[1 - side].attrs())
+    if not _push_conditions(u, b, side):
+        return None
+    kids = list(b.children)
+    kids[side] = u.with_children(kids[side])
+    return _valid(b.with_children(*kids), like=original)
+
+
+def pull_unary_from_binary(b: Node, side: int) -> Optional[Node]:
+    """`b(..., u(X), ...)` → `u(b(..., X, ...))` — inverse rewrite.
+
+    A projecting Reduce (e.g. keys()-style aggregation) pulled above a
+    PK-join is extended with group-constant pass-through of the other
+    side's attributes so the plan's output schema is preserved."""
+    u = b.children[side]
+    if not _is_unary_op(u):
+        return None
+    x = u.children[0]
+    kids = list(b.children)
+    kids[side] = x
+    try:
+        new_b = b.with_children(*kids)
+    except (ValueError, KeyError):
+        return None
+    if not _push_conditions(u, new_b, side):
+        return None
+    if isinstance(u, ReduceOp):
+        missing = b.attrs() - u.attrs() - u.props.adds
+        other_attrs = new_b.children[1 - side].attrs()
+        extra = missing & other_attrs
+        if extra and u.props.kat_emit is not None \
+                and u.props.kat_emit.name.startswith("PER_GROUP"):
+            u = _extend_reduce(u, extra)
+    return _valid(u.with_children(new_b), like=b)
+
+
+# ---------------------------------------------------------------------------
+# Binary-binary rotation (Lemma 1 generalized) and commutation
+# ---------------------------------------------------------------------------
+def _swap_args_udf(udf):
+    def swapped(r, l, out):  # noqa: E741
+        return udf(l, r, out)
+
+    swapped.__name__ = getattr(udf, "__name__", "udf") + "_commuted"
+    swapped.__wrapped_pair_udf__ = udf
+    return swapped
+
+
+def commute(b: Node) -> Optional[Node]:
+    """Swap the two inputs of a Match/Cross/CoGroup (schema is name-based)."""
+    if not _is_binary_op(b):
+        return None
+    if isinstance(b, CrossOp):
+        new = dataclasses.replace(b, left=b.right, right=b.left,
+                                  udf=_swap_args_udf(b.udf), out_schema=None)
+    else:
+        hints = b.hints
+        if hints.pk_side in ("left", "right"):
+            hints = dataclasses.replace(
+                hints, pk_side="right" if hints.pk_side == "left" else "left")
+        new = dataclasses.replace(
+            b, left=b.right, right=b.left, left_key=b.right_key,
+            right_key=b.left_key, udf=_swap_args_udf(b.udf), hints=hints,
+            out_schema=None)
+    return _valid(new)
+
+
+def rotate(parent: Node, side: int) -> Optional[Node]:
+    """Associativity: `p(a(X, Y), Z)` → `a(X, p(Y, Z))` (side=0 child) and the
+    mirrored `p(X, a(Y, Z))` → `a(p(X, Y), Z)` (side=1 child).
+
+    Guards are Lemma 1 evaluated on effective sets: each operator must only
+    reference attributes still below it after the rotation, and the two
+    conceptual UDFs must satisfy ROC.  Only RAT binaries (Match/Cross) rotate;
+    CoGroup consolidates records, so rotations around it are unsafe without
+    per-group cardinality knowledge (conservative, as the paper's Sec. 4.3.2).
+    """
+    if not isinstance(parent, (MatchOp, CrossOp)):
+        return None
+    child = parent.children[side]
+    if not isinstance(child, (MatchOp, CrossOp)):
+        return None
+    if parent.props.schema_dependent or child.props.schema_dependent:
+        return None  # rotations change both operators' input schemas
+    if not roc(parent, child):
+        return None
+
+    if side == 0:
+        x, y = child.children
+        z = parent.children[1]
+        # parent must not reference X's attrs; child must not reference Z's.
+        if (eff_reads(parent) | eff_writes(parent)) & x.attrs():
+            return None
+        if (eff_reads(child) | eff_writes(child)) & z.attrs():
+            return None
+        try:
+            inner = parent.with_children(y, z)
+            return _valid(child.with_children(x, inner), like=parent)
+        except (ValueError, KeyError):
+            return None
+    else:
+        y, z = child.children
+        x = parent.children[0]
+        if (eff_reads(parent) | eff_writes(parent)) & z.attrs():
+            return None
+        if (eff_reads(child) | eff_writes(child)) & x.attrs():
+            return None
+        try:
+            inner = parent.with_children(x, y)
+            return _valid(child.with_children(inner, z), like=parent)
+        except (ValueError, KeyError):
+            return None
+
+
+# ---------------------------------------------------------------------------
+# reorderable() — the predicate used by Algorithm 1 (unary chains)
+# ---------------------------------------------------------------------------
+def reorderable(r: Node, s: Node) -> bool:
+    """Paper's Boolean reorderable(r, s) for two neighbouring unary ops."""
+    return unary_reorderable(r, s)
+
+
+# ---------------------------------------------------------------------------
+# All single-step rewrites of a tree (used by the closure enumerator)
+# ---------------------------------------------------------------------------
+def local_rewrites(node: Node) -> list[Node]:
+    """Every tree reachable from `node` by ONE valid rewrite at the root."""
+    out: list[Node] = []
+    if _is_unary_op(node):
+        child = node.children[0]
+        if _is_unary_op(child):
+            t = swap_unary(node, child)
+            if t is not None:
+                out.append(t)
+        if _is_binary_op(child):
+            for side in (0, 1):
+                t = push_unary_into_binary(node, child, side)
+                if t is not None:
+                    out.append(t)
+    if _is_binary_op(node):
+        for side in (0, 1):
+            if _is_unary_op(node.children[side]):
+                t = pull_unary_from_binary(node, side)
+                if t is not None:
+                    out.append(t)
+            if isinstance(node.children[side], (MatchOp, CrossOp)):
+                t = rotate(node, side)
+                if t is not None:
+                    out.append(t)
+        t = commute(node)
+        if t is not None:
+            out.append(t)
+    return out

@@ -1,0 +1,14 @@
+"""Static code analysis of black-box UDFs (paper Sec. 5).
+
+Two analyzers produce the same `UdfProperties`:
+
+* `bytecode`  — the paper-faithful port: conservative dataflow analysis over
+  CPython bytecode (the paper analyses Java 3-address code with Soot).
+* `jaxpr_sca` — the JAX-native analyzer: traces the UDF into a jaxpr and
+  computes exact read/write dependence (beyond-paper; strictly tighter).
+
+`analyze_udf` is the entry point; mode='auto' prefers the jaxpr analyzer and
+falls back to bytecode when the UDF is untraceable.
+"""
+
+from .analyze import analyze_udf, infer_add_dtypes  # noqa: F401

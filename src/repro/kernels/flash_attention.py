@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: fused causal/windowed GQA flash attention.
+
+The model-plane hot spot.  FlashAttention-2 layout adapted to the TPU memory
+hierarchy: the [T, S] logits matrix never materializes in HBM — each grid
+step streams one KV tile through VMEM and maintains the online-softmax
+running (max, denominator, accumulator) in VMEM scratch.
+
+grid = (B, Hq, T // BLOCK_Q, S // BLOCK_K); the KV-tile dimension is the
+trailing (sequential) one, so scratch carries across it.  Block shapes are
+MXU-aligned: BLOCK_Q × D and BLOCK_K × D tiles with D = head_dim (padded to
+128 lanes by ops.py when needed).  VMEM per step ≈ (BLOCK_Q + 2*BLOCK_K) * D
+* 4B + BLOCK_Q*BLOCK_K logits ≈ 0.4 MiB at 128x128x128 — far under 128 MiB,
+leaving room for double-buffered pipelining.
+
+Causal + sliding-window masks are applied in-kernel; fully-masked KV tiles
+are skipped via `pl.when` on the block index range (the FlashAttention-2
+block-skipping trick, which on TPU saves both MXU issue slots and the VMEM
+streaming of dead tiles).
+
+GQA: the K/V index maps divide the query-head index by the group size, so
+no repeated KV materialization (`jnp.repeat` in the oracle) ever happens.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+BLOCK_Q = 128
+BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window, block_q: int, block_k: int,
+            t: int, s: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # absolute positions (q timeline sits at the tail of the kv timeline)
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0) + (s - t)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    # tile-level skip: is any (q, k) pair in this tile live?
+    lo_q, hi_q = iq * block_q + (s - t), iq * block_q + block_q - 1 + (s - t)
+    lo_k = ik * block_k
+    live = True
+    if causal:
+        live = jnp.asarray(lo_k <= hi_q)
+    if window is not None:
+        live = jnp.logical_and(live, lo_k + block_k - 1 > lo_q - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale     # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)             # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)             # [bk, dv]
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)          # [bq, bk]
+        mask = jnp.ones_like(logits, dtype=jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_scr[...]                              # [bq, 1]
+        m_cur = jnp.max(logits, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new)                      # [bq, bk]
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                  # rescale factor
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == pl.num_programs(3) - 1)
+    def _emit():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "scale", "interpret", "block_q", "block_k"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: int | None = None,
+                    scale: float | None = None, interpret: bool = True,
+                    block_q: int = BLOCK_Q, block_k: int = BLOCK_K):
+    """q [B,Hq,T,D], k/v [B,Hkv,S,D] -> [B,Hq,T,D].  T % block_q == 0,
+    S % block_k == 0 (ops.py pads & slices)."""
+    b, hq, t, d = q.shape
+    _, hkv, s, dv = v.shape
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    grid = (b, hq, t // block_q, s // block_k)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, window=window,
+                          block_q=block_q, block_k=block_k, t=t, s=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, i, j, g=group: (b_, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, dv),
+                         lambda b_, h, i, j, g=group: (b_, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dv),
+                               lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, t, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

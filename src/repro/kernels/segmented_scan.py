@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: blocked segmented inclusive scan.
+
+The Reduce/CoGroup hot loop (DESIGN.md §3.1): grouped aggregation over
+key-sorted rows = segmented scan + boundary gather.  Nephele's hash
+aggregation has no TPU analogue (random scatter serializes on the VPU);
+the sort-based segmented scan is dense, tiled and vectorizable.
+
+Kernel layout
+-------------
+grid = (N // BLOCK_N,) — TPU grid steps run sequentially, so the carry
+(last row's running value + segment-open flag per column) lives in VMEM
+scratch and flows block to block.  In-block work is a `lax.associative_scan`
+over [BLOCK_N, C] tiles with the classic segmented combine
+
+    (v1,f1) ⊕ (v2,f2) = (f2 ? v2 : v1∘v2,  f1|f2)
+
+Block shapes: BLOCK_N=512 rows × C columns (C = number of aggregated fields,
+padded to the 128-lane boundary by the ops.py wrapper).  VMEM footprint =
+(values + flags + out) * BLOCK_N * C * 4B ≈ 3 * 512 * 128 * 4B = 786 KiB for
+the widest tile — comfortably inside the 128 MiB v5e VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+BLOCK_N = 512
+
+_COMBINE = {
+    "add": jnp.add,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+}
+
+
+_IDENTITY = {"add": 0.0, "max": -jnp.inf, "min": jnp.inf}
+
+
+def _kernel(x_ref, f_ref, o_ref, carry_v, *, op: str):
+    i = pl.program_id(0)
+    combine = _COMBINE[op]
+
+    @pl.when(i == 0)
+    def _init():
+        carry_v[...] = jnp.full_like(carry_v, _IDENTITY[op])
+
+    vals = x_ref[...]                            # [BLOCK_N, C]
+    flags = f_ref[...].astype(bool)              # [BLOCK_N, 1]
+
+    def comb(a, b):
+        av, af = a
+        bv, bf = b
+        return jnp.where(bf, bv, combine(av, bv)), af | bf
+
+    sv, sf = jax.lax.associative_scan(
+        comb, (vals, jnp.broadcast_to(flags, vals.shape)), axis=0)
+
+    # Fold the carry into this block's open prefix (rows not preceded by any
+    # in-block flag).  The carry value already absorbs all prior history, so
+    # the merge is simply comb(carry, row) — no carry flag is needed.
+    cv = carry_v[...]                            # [1, C]
+    merged = jnp.where(sf, sv, combine(cv, sv))
+    o_ref[...] = merged
+    carry_v[...] = merged[-1:]
+
+
+@functools.partial(jax.jit, static_argnames=("op", "interpret", "block_n"))
+def segmented_scan(values: jnp.ndarray, flags: jnp.ndarray, op: str = "add",
+                   interpret: bool = True, block_n: int = BLOCK_N):
+    """values [N, C] f32, flags [N] bool -> inclusive segmented scan [N, C].
+
+    N must be a multiple of `block_n` (ops.py pads).  Rows before the first
+    flag are treated as one open segment seeded with the op identity.
+    """
+    n, c = values.shape
+    assert n % block_n == 0, (n, block_n)
+    f2 = flags.reshape(n, 1).astype(jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_kernel, op=op),
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, c), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c), values.dtype),
+        scratch_shapes=[pltpu.VMEM((1, c), values.dtype)],
+        interpret=interpret,
+    )(values, f2)

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: blocked sorted-search probe (vectorized searchsorted).
+
+The Match hot loop (DESIGN.md §3.1): the PK side is sorted once; every probe
+row finds its insertion position.  Per-lane binary search needs random
+gathers, which serialize on the TPU VPU — instead we do a *blocked
+broadcast-compare*: for each [BLOCK_Q] probe tile and [BLOCK_K] key tile,
+a [BLOCK_Q, BLOCK_K] `<` comparison matrix is reduced over lanes and
+accumulated across key tiles:
+
+    pos[q] = sum_k  1[key_k < q]        (searchsorted side='left')
+
+grid = (M // BLOCK_Q, N // BLOCK_K); the accumulator lives in VMEM scratch
+and is re-zeroed whenever the key-tile index wraps (TPU grids iterate the
+trailing dimension fastest).  VMEM: BLOCK_Q*BLOCK_K compares at 1024x1024
+= 4 MiB i32 intermediates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+BLOCK_Q = 1024
+BLOCK_K = 1024
+
+
+def _kernel(k_ref, q_ref, o_ref, acc):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    keys = k_ref[...]          # [1, BLOCK_K]
+    qs = q_ref[...]            # [BLOCK_Q, 1]
+    acc[...] += jnp.sum((keys < qs).astype(jnp.int32), axis=1, keepdims=True)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _emit():
+        o_ref[...] = acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_q", "block_k"))
+def sorted_probe(keys_sorted: jnp.ndarray, queries: jnp.ndarray,
+                 interpret: bool = True, block_q: int = BLOCK_Q,
+                 block_k: int = BLOCK_K) -> jnp.ndarray:
+    """keys_sorted [N] (ascending), queries [M] -> positions [M] int32.
+
+    ops.py pads N/M to block multiples (pad keys with +inf-like max values so
+    they never count; pad queries arbitrarily and slice off).
+    """
+    n, m = keys_sorted.shape[0], queries.shape[0]
+    assert n % block_k == 0 and m % block_q == 0, (n, m)
+    k2 = keys_sorted.reshape(1, n)
+    q2 = queries.reshape(m, 1)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(m // block_q, n // block_k),
+        in_specs=[
+            pl.BlockSpec((1, block_k), lambda i, j: (0, j)),
+            pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_q, 1), jnp.int32)],
+        interpret=interpret,
+    )(k2, q2)
+    return out[:, 0]

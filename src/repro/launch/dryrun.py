@@ -1,0 +1,383 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede every other import: jax locks the device count on first
+# initialization, and the production-mesh dry-run needs 512 host devices.
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import ARCH_IDS, SHAPES, get_config, input_specs, long_ok  # noqa: E402
+from ..models import make_model  # noqa: E402
+from ..parallel import sharding as sh  # noqa: E402
+from ..train.optimizer import AdamWConfig, init_opt_state  # noqa: E402
+from ..train.train_step import TrainConfig, make_train_step  # noqa: E402
+from . import roofline as RL  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+
+"""Multi-pod dry-run: `.lower().compile()` every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: sharding
+mismatches, compile-time OOM, or unsupported collectives fail HERE.
+The compiled artifact also feeds the roofline analysis (§Roofline).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+"""
+
+
+def _batch_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _batch_sharding(mesh, spec_tree):
+    ba = _batch_axes(mesh)
+    bsize = _axis_size(mesh, ba)
+
+    def one(leaf):
+        first = ba if len(ba) > 1 else (ba[0] if ba else None)
+        if not leaf.shape or leaf.shape[0] % max(bsize, 1) != 0:
+            first = None  # e.g. batch=1 long-context decode: replicate
+        extra = (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*((first,) + extra)))
+
+    return jax.tree.map(one, spec_tree)
+
+
+def _axis_size(mesh, axes) -> int:
+    size = 1
+    d = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        size *= d.get(a, 1)
+    return size
+
+
+def decode_state_shardings(state_shapes, batch: int, mesh):
+    """Sharding rules for decode caches/states (DESIGN.md §6):
+    batch dim over (pod, data); KV-cache sequence dim over `model`
+    (sequence-parallel decode); everything else replicated."""
+    ba = _batch_axes(mesh)
+    bsize = _axis_size(mesh, ba)
+    msize = _axis_size(mesh, "model")
+
+    def one(path, leaf):
+        name = ""
+        for part in reversed(path):
+            k = getattr(part, "key", None)
+            if isinstance(k, str):
+                name = k
+                break
+        spec = [None] * len(leaf.shape)
+        if name != "pos":
+            for i, d in enumerate(leaf.shape):
+                if d == batch and batch % max(bsize, 1) == 0 and bsize > 1:
+                    spec[i] = ba if len(ba) > 1 else ba[0]
+                    break
+        if name in ("k", "v") and len(leaf.shape) >= 2:
+            sdim = len(leaf.shape) - 2
+            if spec[sdim] is None and leaf.shape[sdim] % msize == 0 \
+                    and msize > 1:
+                spec[sdim] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, state_shapes)
+
+
+# Production microbatch counts for the memory-fit compile of train cells
+# (tuned so peak HBM per chip stays under the v5e 16 GiB; see EXPERIMENTS.md
+# §Dry-run methodology).
+TRAIN_MICROBATCH = {
+    "qwen2.5-14b": 8, "llama3.2-1b": 2, "granite-20b": 16, "qwen3-0.6b": 2,
+    "rwkv6-3b": 4, "mixtral-8x22b": 64, "qwen2-moe-a2.7b": 8,
+    "recurrentgemma-2b": 4, "whisper-tiny": 2, "phi-3-vision-4.2b": 4,
+}
+
+# Dry-run lowering knobs: layers UNROLLED for the roofline compile because
+# XLA cost_analysis counts while-loop bodies exactly once (verified in
+# EXPERIMENTS.md §Dry-run); remat=full bounds activation memory.
+ROOFLINE_OVERRIDES = {"scan_layers": False, "remat": "full"}
+# fit/production config: scanned layers + blocked (flash-style, O(T·block)
+# live memory) attention — the §Perf iteration that removed the materialized
+# [T, S] logits matrices from train/prefill peaks
+FIT_OVERRIDES = {"scan_layers": True, "remat": "full",
+                 "attn_impl": "blocked"}
+
+
+def _lower_train(model, cfg, shape, mesh, microbatches: int):
+    params_shapes = model.param_shapes()
+    param_shardings = sh.params_sharding(params_shapes, mesh)
+    specs = input_specs(cfg, shape)
+    opt_shapes = jax.eval_shape(init_opt_state, params_shapes)
+    opt_shardings = {"mu": param_shardings, "nu": param_shardings,
+                     "count": NamedSharding(mesh, P())}
+    tstep = make_train_step(model, TrainConfig(
+        opt=AdamWConfig(), microbatches=microbatches))
+    fn = jax.jit(tstep,
+                 in_shardings=(param_shardings, opt_shardings,
+                               _batch_sharding(mesh, specs["batch"]),
+                               NamedSharding(mesh, P())),
+                 donate_argnums=(0, 1))
+    with mesh:
+        return fn.lower(params_shapes, opt_shapes, specs["batch"],
+                        jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def _lower_for_kind(model, cfg, shape, mesh, microbatches: int = 1):
+    params_shapes = model.param_shapes()
+    param_shardings = sh.params_sharding(params_shapes, mesh)
+    specs = input_specs(cfg, shape)
+    if shape.kind == "train":
+        return _lower_train(model, cfg, shape, mesh,
+                            microbatches=microbatches)
+    if shape.kind == "prefill":
+        def serve_prefill(params, batch):
+            state = model.init_decode_state(shape.batch, shape.seq)
+            return model.prefill(params, batch, state)
+
+        fn = jax.jit(serve_prefill,
+                     in_shardings=(param_shardings,
+                                   _batch_sharding(mesh, specs["batch"])))
+        with mesh:
+            return fn.lower(params_shapes, specs["batch"])
+    state_shapes = specs["state"]
+    state_shardings = decode_state_shardings(state_shapes, shape.batch, mesh)
+
+    def serve_step(params, token, state):
+        return model.decode_step(params, token, state)
+
+    fn = jax.jit(serve_step,
+                 in_shardings=(param_shardings,
+                               _batch_sharding(mesh, specs["token"]),
+                               state_shardings),
+                 donate_argnums=(2,))
+    with mesh:
+        return fn.lower(params_shapes, specs["token"], state_shapes)
+
+
+def _measure(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {"flops": max(float(ca.get("flops", 0.0)), 0.0),
+            "hbm": max(float(ca.get("bytes accessed", 0.0)), 0.0),
+            "coll": RL.collective_bytes(compiled.as_text())}
+
+
+def _probe_depths(cfg) -> tuple[int, int] | None:
+    """Layer counts for the two-depth roofline probes.  Unrolled compiles of
+    40-56 layer stacks are prohibitively slow on this 1-core container, and
+    the stacked layers are homogeneous by construction (lax.scan requires
+    it), so per-layer costs from (L1, L2) probes extrapolate EXACTLY to the
+    full depth.  The tail structure (hybrid remainder layers, embeddings,
+    loss) is preserved by keeping L ≡ L1 ≡ L2 (mod pattern)."""
+    base = max(len(cfg.block_pattern), 1)
+    r = cfg.n_layers % base
+    l1, l2 = r + 2 * base, r + 4 * base
+    if cfg.n_layers <= l2 or cfg.family == "encdec":
+        return None
+    return l1, l2
+
+
+def _extrapolate(m1: dict, m2: dict, l1: int, l2: int, full: int) -> dict:
+    def ext(a, b):
+        per = (b - a) / (l2 - l1)
+        return max(a + per * (full - l1), 0.0)
+
+    kinds = set(m1["coll"]) | set(m2["coll"])
+    return {"flops": ext(m1["flops"], m2["flops"]),
+            "hbm": ext(m1["hbm"], m2["hbm"]),
+            "coll": {k: ext(m1["coll"].get(k, 0), m2["coll"].get(k, 0))
+                     for k in kinds}}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
+               do_compile: bool = True, cfg_overrides: dict | None = None,
+               fit_check: bool = True, variant: str = "roofline"):
+    """Lower (and compile) one cell; returns a metrics dict.
+
+    variant='roofline' (single-pod): layers unrolled, microbatch=1 — exact
+    cost analysis via two-depth probes extrapolated to full depth (see
+    `_probe_depths`); train cells ALSO compile the production (scanned +
+    microbatched) full-depth config whose memory_analysis proves per-chip
+    fit.  variant='fit' (multi-pod pass): production config only — proves
+    the pod-axis sharding compiles; the roofline table is single-pod."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(mesh.devices.size)
+    overrides = dict(ROOFLINE_OVERRIDES if variant == "roofline"
+                     else FIT_OVERRIDES)
+    overrides.update(cfg_overrides or {})
+    cfg = get_config(arch, **overrides)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not long_ok(cfg):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name(mesh),
+                "skipped": "full attention is O(L^2) at 500k (DESIGN.md §5)"}
+
+    model = make_model(cfg)
+    row = {"arch": arch, "shape": shape_name, "mesh": mesh_name(mesh),
+           "chips": chips, "params": model.param_count(),
+           "variant": variant}
+    tokens = shape.batch * shape.seq if shape.kind != "decode" \
+        else shape.batch
+
+    t0 = time.perf_counter()
+    if variant == "fit":
+        lowered = _lower_for_kind(model, cfg, shape, mesh,
+                                  TRAIN_MICROBATCH.get(arch, 4))
+        row["lower_s"] = round(time.perf_counter() - t0, 2)
+        if not do_compile:
+            return row
+        compiled = lowered.compile()
+        row["compile_s"] = round(time.perf_counter() - t0, 2)
+        row["memory"] = RL.memory_summary(compiled)
+        row["collectives"] = RL.collective_bytes(compiled.as_text())
+        return row
+
+    # roofline variant
+    depths = _probe_depths(cfg)
+    if depths is None:
+        lowered = _lower_for_kind(model, cfg, shape, mesh)
+        row["lower_s"] = round(time.perf_counter() - t0, 2)
+        if not do_compile:
+            return row
+        compiled = lowered.compile()
+        row["compile_s"] = round(time.perf_counter() - t0, 2)
+        m = _measure(compiled)
+        row["memory"] = RL.memory_summary(compiled)
+    else:
+        l1, l2 = depths
+        ms = []
+        for li in (l1, l2):
+            cfg_i = cfg.with_(n_layers=li)
+            model_i = make_model(cfg_i)
+            compiled_i = _lower_for_kind(model_i, cfg_i, shape,
+                                         mesh).compile()
+            ms.append(_measure(compiled_i))
+        row["probe_depths"] = [l1, l2]
+        row["compile_s"] = round(time.perf_counter() - t0, 2)
+        m = _extrapolate(ms[0], ms[1], l1, l2, cfg.n_layers)
+
+    mf = RL.model_flops_for(cfg, shape.kind, tokens)
+    rl = RL.Roofline(flops=m["flops"], hbm_bytes=m["hbm"],
+                     coll_bytes=float(sum(m["coll"].values())),
+                     coll_by_kind=m["coll"], model_flops=mf, chips=chips)
+    row["roofline"] = rl.row()
+    row["lower_s"] = row.get("lower_s", round(time.perf_counter() - t0, 2))
+
+    if shape.kind in ("train",) and fit_check:
+        fit_cfg = get_config(arch, **dict(FIT_OVERRIDES,
+                                          **(cfg_overrides or {})))
+        fit_model = make_model(fit_cfg)
+        mb = TRAIN_MICROBATCH.get(arch, 4)
+        t0 = time.perf_counter()
+        fit_compiled = _lower_for_kind(fit_model, fit_cfg, shape, mesh,
+                                       microbatches=mb).compile()
+        row["fit_compile_s"] = round(time.perf_counter() - t0, 2)
+        row["fit_microbatches"] = mb
+        row["fit_memory"] = RL.memory_summary(fit_compiled)
+    elif depths is not None:
+        # full-depth scanned compile for the memory-fit column
+        fit_cfg = get_config(arch, **dict(FIT_OVERRIDES,
+                                          **(cfg_overrides or {})))
+        fit_model = make_model(fit_cfg)
+        t0 = time.perf_counter()
+        fit_compiled = _lower_for_kind(fit_model, fit_cfg, shape,
+                                       mesh).compile()
+        row["fit_compile_s"] = round(time.perf_counter() - t0, 2)
+        row["fit_memory"] = RL.memory_summary(fit_compiled)
+    return row
+
+
+def mesh_name(mesh) -> str:
+    return "x".join(str(s) for s in mesh.devices.shape) \
+        + f"({','.join(mesh.axis_names)})"
+
+
+def run_cells(archs, shapes, meshes, do_compile=True, out=None,
+              verbose=True):
+    rows = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            if shape_name == "long_500k" and not long_ok(cfg):
+                rows.append({"arch": arch, "shape": shape_name,
+                             "mesh": "-", "skipped":
+                             "full attention at 500k (DESIGN.md §5)"})
+                if verbose:
+                    print(f"[skip] {arch} x {shape_name}: full attention")
+                if out:
+                    with open(out, "w") as f:
+                        json.dump(rows, f, indent=1)
+                continue
+            for multi_pod in meshes:
+                try:
+                    row = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                                     do_compile=do_compile,
+                                     variant="fit" if multi_pod
+                                     else "roofline")
+                except Exception as e:
+                    row = {"arch": arch, "shape": shape_name,
+                           "mesh": "multi" if multi_pod else "single",
+                           "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                rows.append(row)
+                if verbose:
+                    _print_row(row)
+                if out:
+                    with open(out, "w") as f:
+                        json.dump(rows, f, indent=1)
+    return rows
+
+
+def _print_row(row):
+    if "error" in row:
+        print(f"[FAIL] {row['arch']} x {row['shape']} x {row['mesh']}: "
+              f"{row['error']}")
+    elif "skipped" in row:
+        print(f"[skip] {row['arch']} x {row['shape']}: {row['skipped']}")
+    else:
+        rl = row.get("roofline", {})
+        mem = row.get("fit_memory", row.get("memory", {}))
+        print(f"[ok] {row['arch']:18s} {row['shape']:12s} {row['mesh']:18s} "
+              f"lower={row['lower_s']:6.1f}s "
+              f"compile={row.get('compile_s', 0):6.1f}s "
+              f"fit_peak={mem.get('peak_bytes', 0) / 2**30:6.2f}GiB "
+              f"bound={rl.get('bottleneck', '-'):10s} "
+              f"useful={rl.get('useful_ratio', 0):.3f} "
+              f"rf={rl.get('roofline_fraction', 0):.3f}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" or args.all \
+        else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" or args.all \
+        else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    rows = run_cells(archs, shapes, meshes, do_compile=not args.no_compile,
+                     out=args.out)
+    n_ok = sum(1 for r in rows if "error" not in r and "skipped" not in r)
+    n_skip = sum(1 for r in rows if "skipped" in r)
+    n_fail = sum(1 for r in rows if "error" in r)
+    print(f"\n{n_ok} ok, {n_skip} skipped, {n_fail} failed "
+          f"of {len(rows)} cells")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

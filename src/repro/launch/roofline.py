@@ -1,0 +1,162 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs_per_device / peak_bf16_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bandwidth_per_chip
+    collective = collective_bytes_per_device / ICI_link_bandwidth
+
+FLOPs/bytes come from `compiled.cost_analysis()` (the per-device SPMD
+program).  Collective bytes are NOT in cost_analysis: we parse the optimized
+HLO (`compiled.as_text()`) and sum the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) gives the useful-compute
+ratio that catches remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+from .. import hw
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"collective-broadcast)(?:-start|-done)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape string, e.g. 'f32[1024,512]{1,0}' or a tuple."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result bytes of every collective op in the optimized HLO,
+    keyed by op kind.  '-start' variants counted once ('-done' repeats the
+    shape and is skipped via the start/done dedup)."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:  # async completion: shape already counted
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(shape_str)
+    return {k: v for k, v in out.items() if v}
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                    # per-device HLO flops
+    hbm_bytes: float                # per-device bytes accessed
+    coll_bytes: float               # per-device collective bytes
+    coll_by_kind: dict
+    model_flops: float              # 6 N D (global)
+    chips: int
+    chip: hw.ChipSpec = hw.CHIP
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / self.chip.peak_bf16_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / self.chip.hbm_bandwidth
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / self.chip.ici_link_bandwidth
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (global HLO flops)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-term bound that useful compute achieves:
+        (MODEL_FLOPS / chips / peak) / max(term)."""
+        t_useful = self.model_flops / self.chips / self.chip.peak_bf16_flops
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_useful / t_bound if t_bound else 0.0
+
+    def row(self) -> dict:
+        return {
+            "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "coll_by_kind": self.coll_by_kind,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analyze(compiled, model_flops: float, chips: int) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # some backends return one dict per partition
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    co = collective_bytes(compiled.as_text())
+    return Roofline(flops=max(flops, 0.0), hbm_bytes=max(hbm, 0.0),
+                    coll_bytes=float(sum(co.values())), coll_by_kind=co,
+                    model_flops=model_flops, chips=chips)
+
+
+def model_flops_for(cfg, shape_kind: str, tokens: int) -> float:
+    """6·N·D with N = active params for MoE; D = tokens processed.
+    Training multiplies by 3 (fwd + bwd ≈ 2x fwd)."""
+    n = cfg.active_param_count()
+    mult = 3.0 if shape_kind == "train" else 1.0
+    return 2.0 * n * tokens * mult
+
+
+def memory_summary(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(ma, "temp_size_in_bytes", 0))
+            + int(getattr(ma, "argument_size_in_bytes", 0)),
+        }
+    except Exception as e:  # pragma: no cover
+        return {"error": repr(e)}

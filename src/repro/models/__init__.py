@@ -1,0 +1,2 @@
+from .config import ModelConfig  # noqa: F401
+from .model import Model, make_model  # noqa: F401

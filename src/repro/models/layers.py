@@ -1,0 +1,282 @@
+"""Shared model-plane layers: norms, RoPE, GQA attention (+cache), MLPs.
+
+Pure-functional: params are plain dict pytrees; init_* return params,
+apply functions take (params, inputs).  Activation sharding hints are
+applied via `with_sharding_constraint` using logical axis names resolved by
+`repro.parallel.sharding.logical` (no-ops outside a mesh context).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.sharding import logical_constraint
+
+
+def _init_dense(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else (1.0 / np.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x [..., T, D] with D even; positions [T] or broadcastable."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., :, None] * freqs  # [T, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + optional qk-norm / bias / sliding window / cache)
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg, use_rope=True):
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _init_dense(ks[0], d, hq * dh, cfg.p_dtype),
+        "wk": _init_dense(ks[1], d, hkv * dh, cfg.p_dtype),
+        "wv": _init_dense(ks[2], d, hkv * dh, cfg.p_dtype),
+        "wo": _init_dense(ks[3], hq * dh, d, cfg.p_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), cfg.p_dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), cfg.p_dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), cfg.p_dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(dh, cfg.p_dtype)
+        p["k_norm"] = init_rmsnorm(dh, cfg.p_dtype)
+    return p
+
+
+def _project_qkv(p, cfg, x, positions, use_rope=True):
+    b, t, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(b, t, hq, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, hkv, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, hkv, dh).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = logical_constraint(q, ("batch", "heads", None, None))
+    k = logical_constraint(k, ("batch", "kv_heads", None, None))
+    return q, k, v
+
+
+def xla_attention(q, k, v, causal=True, window=None):
+    """Reference attention in plain XLA ops (lowers everywhere)."""
+    from ..kernels import ref
+
+    return ref.attention(q, k, v, causal=causal, window=window)
+
+
+def _attention(cfg, q, k, v, causal, window):
+    if cfg.attn_impl == "flash":
+        from ..kernels import ops as kops
+
+        return kops.flash_attention(q, k, v, causal=causal, window=window)
+    if cfg.attn_impl == "blocked":
+        # flash-style online softmax in plain XLA: O(T·block) live memory,
+        # lowers on every backend (the memory-fit / production CPU path)
+        from ..kernels import ref
+
+        return ref.blocked_attention(q, k, v, causal=causal, window=window)
+    return xla_attention(q, k, v, causal=causal, window=window)
+
+
+def attention_block(p, cfg, x, positions, causal=True, window=None,
+                    use_rope=True, kv_override=None):
+    """Full-sequence attention (training / prefill / cross-attn)."""
+    b, t, d = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions, use_rope)
+    if kv_override is not None:  # cross-attention: kv from encoder
+        k, v = kv_override
+    o = _attention(cfg, q, k, v, causal, window)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.n_heads * cfg.head_dim)
+    out = o @ p["wo"].astype(x.dtype)
+    return logical_constraint(out, ("batch", None, None))
+
+
+def attention_prefill(p, cfg, x, positions, cache, window=None,
+                      use_rope=True):
+    """Full-sequence attention + KV-cache fill (the fused prefill path).
+
+    For windowed caches (ring buffers of size s) the last s positions are
+    written at slots (pos % s); requires t % s == 0 or t <= s so the ring
+    layout matches `attention_decode`'s slot arithmetic."""
+    b, t, d = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions, use_rope)
+    s = cache["k"].shape[2]
+    assert t % s == 0 or t <= s, (t, s)
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k[:, :, -s:].astype(cache["k"].dtype), (0, 0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v[:, :, -s:].astype(cache["v"].dtype), (0, 0, 0, 0))
+    new_cache = {"k": ck, "v": cv,
+                 "pos": jnp.zeros((), jnp.int32) + t}
+    o = _attention(cfg, q, k, v, True, window)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.n_heads * cfg.head_dim)
+    return o @ p["wo"].astype(x.dtype), new_cache
+
+
+def attention_decode(p, cfg, x, cache, window=None, use_rope=True):
+    """Single-token decode with an in-place ring/linear KV cache.
+
+    cache = {"k": [B,Hkv,S,D], "v": [B,Hkv,S,D], "pos": scalar int32}.
+    For sliding-window configs the cache is a ring buffer of size window.
+    """
+    b, t, d = x.shape
+    assert t == 1, "decode step takes one new token"
+    pos = cache["pos"]
+    positions = pos[None] if pos.ndim == 0 else pos
+    q, k, v = _project_qkv(p, cfg, x, jnp.asarray(positions), use_rope)
+    s = cache["k"].shape[2]
+    slot = (jnp.mod(pos, s) if window is not None else pos).astype(jnp.int32)
+    zero = jnp.zeros((), jnp.int32)
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (zero, zero, slot, zero))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (zero, zero, slot, zero))
+
+    kpos = jnp.arange(s)
+    if window is not None:  # ring buffer: absolute position of each slot
+        wrap = (pos // s) * s
+        abs_pos = jnp.where(kpos <= jnp.mod(pos, s), wrap + kpos,
+                            wrap - s + kpos)
+        live = (abs_pos >= 0) & (abs_pos > pos - window) & (abs_pos <= pos)
+    else:
+        live = kpos <= pos
+
+    # mixed-precision probe: contract native-dtype cache against the query
+    # with f32 accumulation — never materializes an f32 copy of the cache
+    # (PERF: a full-cache .astype(f32) doubled decode peak memory)
+    qf = q.astype(ck.dtype) * cfg.head_dim ** -0.5
+    group = cfg.n_heads // cfg.kv_heads
+    b_, hq = q.shape[0], cfg.n_heads
+    qg = qf.reshape(b_, cfg.kv_heads, group, 1, cfg.head_dim)
+    logits = jax.lax.dot_general(
+        qg, ck, (((4,), (3,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32)      # [b, hkv, g, 1, s]
+    logits = jnp.where(live[None, None, None, None, :], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jax.lax.dot_general(
+        w.astype(cv.dtype), cv, (((4,), (2,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32)      # [b, hkv, g, 1, d]
+    o = o.reshape(b_, hq, 1, cfg.head_dim).astype(x.dtype)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    out = o @ p["wo"].astype(x.dtype)
+    new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+    return out, new_cache
+
+
+def init_kv_cache(cfg, batch: int, seq: int, window: Optional[int] = None,
+                  dtype=None):
+    s = min(seq, window) if window else seq
+    dt = dtype or cfg.act_dtype
+    return {
+        "k": jnp.zeros((batch, cfg.kv_heads, s, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, cfg.kv_heads, s, cfg.head_dim), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def init_swiglu(key, d, f, dtype):
+    ks = jax.random.split(key, 3)
+    return {"w_gate": _init_dense(ks[0], d, f, dtype),
+            "w_up": _init_dense(ks[1], d, f, dtype),
+            "w_down": _init_dense(ks[2], f, d, dtype)}
+
+
+def swiglu(p, x):
+    dt = x.dtype
+    g = jax.nn.silu((x @ p["w_gate"].astype(dt)).astype(jnp.float32))
+    u = (x @ p["w_up"].astype(dt)).astype(jnp.float32)
+    h = (g * u).astype(dt)
+    h = logical_constraint(h, ("batch", None, "mlp"))
+    return h @ p["w_down"].astype(dt)
+
+
+def init_gelu_mlp(key, d, f, dtype):
+    ks = jax.random.split(key, 2)
+    return {"w_up": _init_dense(ks[0], d, f, dtype),
+            "b_up": jnp.zeros((f,), dtype),
+            "w_down": _init_dense(ks[1], f, d, dtype),
+            "b_down": jnp.zeros((d,), dtype)}
+
+
+def gelu_mlp(p, x):
+    dt = x.dtype
+    h = jax.nn.gelu((x @ p["w_up"].astype(dt) + p["b_up"].astype(dt))
+                    .astype(jnp.float32)).astype(dt)
+    return h @ p["w_down"].astype(dt) + p["b_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+def init_embedding(key, vocab, d, dtype):
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def embed(p, tokens, dtype):
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(p, x):
+    """Logits in f32 (vocab-parallel matmul under TP)."""
+    logits = x.astype(jnp.float32) @ p["table"].astype(jnp.float32).T
+    return logical_constraint(logits, ("batch", None, "vocab"))

@@ -1,0 +1,70 @@
+"""Model facade: init / loss / prefill / decode per architecture config."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as T
+from .config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- parameters ---------------------------------------------------------
+    def init(self, key) -> dict:
+        return T.init_params(key, self.cfg)
+
+    def param_shapes(self) -> dict:
+        """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+        return jax.eval_shape(lambda: T.init_params(jax.random.key(0),
+                                                    self.cfg))
+
+    def param_count(self) -> int:
+        shapes = self.param_shapes()
+        return sum(int(jnp.prod(jnp.asarray(l.shape)))
+                   for l in jax.tree.leaves(shapes))
+
+    # -- training -----------------------------------------------------------
+    def logits(self, params, batch: dict):
+        return T.forward(params, self.cfg, batch["tokens"],
+                         img_embeds=batch.get("img_embeds"),
+                         audio_frames=batch.get("audio_frames"))
+
+    def loss(self, params, batch: dict) -> jnp.ndarray:
+        """Next-token cross entropy (+ MoE aux)."""
+        logits, aux = self.logits(params, batch)
+        tokens = batch["tokens"]
+        tgt = tokens[:, 1:]
+        lg = logits[:, :-1]
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+        nll = logz - gold
+        mask = batch.get("loss_mask")
+        if mask is not None:
+            m = mask[:, 1:].astype(jnp.float32)
+            nll = (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+        else:
+            nll = nll.mean()
+        return nll + aux
+
+    # -- serving ------------------------------------------------------------
+    def init_decode_state(self, batch: int, seq: int):
+        return T.init_decode_state(self.cfg, batch, seq)
+
+    def prefill(self, params, batch: dict, state):
+        """Fused full-prompt forward that fills the decode caches/states in
+        one pass (per-family paths in transformer.prefill)."""
+        return T.prefill(params, self.cfg, batch, state)
+
+    def decode_step(self, params, token, state):
+        return T.decode_step(params, self.cfg, token, state)
+
+
+def make_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,94 @@
+"""RecurrentGemma blocks: RG-LRU recurrence + short conv (arXiv:2402.19427).
+
+Recurrent block: x -> (linear branch with GeLU gate) x (conv1d(4) -> RG-LRU)
+-> out projection.  RG-LRU per channel:
+
+    r_t = sigmoid(W_a x_t);  i_t = sigmoid(W_i x_t)
+    a_t = a^(c * r_t)                 (a = sigmoid(Lambda), c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The diagonal recurrence runs through `kernels.linear_scan` (Pallas) or its
+associative-scan oracle.  Decode carries (conv window, h) per layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import _init_dense
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg):
+    d = cfg.d_model
+    ds = cfg.rglru_d_state or d
+    ks = iter(jax.random.split(key, 8))
+    return {
+        "w_x": _init_dense(next(ks), d, ds, cfg.p_dtype),
+        "w_gate_rec": _init_dense(next(ks), d, ds, cfg.p_dtype),
+        "conv_w": (jax.random.normal(next(ks), (cfg.conv_width, ds),
+                                     jnp.float32) * 0.1).astype(cfg.p_dtype),
+        "conv_b": jnp.zeros((ds,), cfg.p_dtype),
+        "w_a": _init_dense(next(ks), ds, ds, cfg.p_dtype, scale=0.01),
+        "w_i": _init_dense(next(ks), ds, ds, cfg.p_dtype, scale=0.01),
+        "lam": jnp.asarray(np.linspace(2.0, 5.0, ds), cfg.p_dtype),
+        "w_out": _init_dense(next(ks), ds, d, cfg.p_dtype),
+    }
+
+
+def _conv1d(w, b, x, state=None):
+    """Causal depthwise conv, width W.  x [B,T,C]; state [B,W-1,C]."""
+    wdt = x.dtype
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), wdt)
+    else:
+        pad = state.astype(wdt)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):
+        out = out + xp[:, i:i + x.shape[1]].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    new_state = xp[:, -(width - 1):] if width > 1 else pad
+    return (out + b.astype(jnp.float32)).astype(wdt), new_state
+
+
+def rglru_block(p, cfg, x, state=None, use_kernel=False):
+    """x [B,T,D]; state = {'conv': [B,W-1,S], 'h': [B,S]}."""
+    dt = x.dtype
+    gate = jax.nn.gelu((x @ p["w_gate_rec"].astype(dt)).astype(jnp.float32))
+    u = x @ p["w_x"].astype(dt)
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = _conv1d(p["conv_w"], p["conv_b"], u, conv_state)
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", uf, p["w_a"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(jnp.einsum("btd,de->bte", uf, p["w_i"].astype(jnp.float32)))
+    log_a = -_C * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+
+    h0 = state["h"] if state is not None else None
+    if use_kernel and h0 is None:
+        from ..kernels import ops as kops
+
+        h = kops.linear_scan(a.astype(jnp.float32), gated)
+    else:
+        from ..kernels import ref
+
+        h = ref.linear_scan_chunked(a, gated, h0=h0)
+    new_h = h[:, -1, :]
+    out = (h.astype(jnp.float32) * gate).astype(dt) @ p["w_out"].astype(dt)
+    new_state = {"conv": new_conv, "h": new_h}
+    return out, new_state
+
+
+def init_rglru_state(cfg, batch: int):
+    ds = cfg.rglru_d_state or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, ds), cfg.act_dtype),
+        "h": jnp.zeros((batch, ds), jnp.float32),
+    }

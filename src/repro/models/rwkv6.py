@@ -1,0 +1,177 @@
+"""RWKV-6 (Finch) blocks: time-mix with data-dependent decay + channel-mix.
+
+Faithful structure (arXiv:2404.05892): per-layer token-shift "ddlerp"
+interpolations with low-rank data-dependence, decay w_t produced by a
+LoRA head and squashed with exp(-exp(.)), bonus u, per-head WKV recurrence
+(our `kernels.rwkv6_scan` / ref), SiLU output gating and GroupNorm-style
+per-head normalization.  Decode carries (shift_state, wkv_state) per layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import _init_dense, init_rmsnorm, rmsnorm
+
+_MIXES = ("w", "k", "v", "r", "g")
+
+
+def init_time_mix(key, cfg):
+    d = cfg.d_model
+    h = cfg.rwkv_n_heads
+    dh = cfg.rwkv_head_dim
+    lo, ld = cfg.rwkv_mix_lora, cfg.rwkv_decay_lora
+    ks = iter(jax.random.split(key, 24))
+    p = {
+        "mix_base": jnp.zeros((5, d), cfg.p_dtype),        # mu_w..mu_g
+        "mix_lora_a": (jax.random.normal(next(ks), (5, d, lo), jnp.float32)
+                       * 0.01).astype(cfg.p_dtype),
+        "mix_lora_b": jnp.zeros((5, lo, d), cfg.p_dtype),
+        "w_r": _init_dense(next(ks), d, d, cfg.p_dtype),
+        "w_kk": _init_dense(next(ks), d, d, cfg.p_dtype),
+        "w_vv": _init_dense(next(ks), d, d, cfg.p_dtype),
+        "w_g": _init_dense(next(ks), d, d, cfg.p_dtype),
+        "w_o": _init_dense(next(ks), d, d, cfg.p_dtype),
+        "decay_base": jnp.asarray(
+            np.tile(np.linspace(-6.0, -0.5, dh), h), cfg.p_dtype),
+        "decay_lora_a": (jax.random.normal(next(ks), (d, ld), jnp.float32)
+                         * 0.01).astype(cfg.p_dtype),
+        "decay_lora_b": jnp.zeros((ld, d), cfg.p_dtype),
+        "bonus_u": (jax.random.normal(next(ks), (h, dh), jnp.float32)
+                    * 0.1).astype(cfg.p_dtype),
+        "ln_x": init_rmsnorm(d, cfg.p_dtype),              # per-head norm
+    }
+    return p
+
+
+def _ddlerp(p, x, xx):
+    """Data-dependent lerp between x_t and shifted x (all 5 mixes at once).
+    x, xx: [B,T,D] -> dict of 5 mixed tensors."""
+    dt = x.dtype
+    base = p["mix_base"].astype(jnp.float32)               # [5, D]
+    delta = (xx - x).astype(jnp.float32)                   # [B,T,D]
+    lo = jnp.einsum("btd,mdl->mbtl", delta, p["mix_lora_a"].astype(jnp.float32))
+    dyn = jnp.einsum("mbtl,mld->mbtd", jnp.tanh(lo),
+                     p["mix_lora_b"].astype(jnp.float32))
+    mix = base[:, None, None, :] + dyn                      # [5,B,T,D]
+    out = x.astype(jnp.float32)[None] + delta[None] * mix
+    return {m: out[i].astype(dt) for i, m in enumerate(_MIXES)}
+
+
+def time_mix(p, cfg, x, shift_state=None, wkv_state=None, use_kernel=False):
+    """x [B,T,D]; states for decode: shift [B,D], wkv [B,H,dh,dh]."""
+    b, t, d = x.shape
+    h, dh = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    dt = x.dtype
+    if shift_state is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([shift_state[:, None, :].astype(dt),
+                                x[:, :-1]], axis=1)
+    m = _ddlerp(p, x, prev)
+
+    r = (m["r"] @ p["w_r"].astype(dt)).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    k = (m["k"] @ p["w_kk"].astype(dt)).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    v = (m["v"] @ p["w_vv"].astype(dt)).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    g = jax.nn.silu((m["g"] @ p["w_g"].astype(dt)).astype(jnp.float32))
+
+    dec = p["decay_base"].astype(jnp.float32) + jnp.einsum(
+        "btd,dl,le->bte", m["w"].astype(jnp.float32),
+        p["decay_lora_a"].astype(jnp.float32),
+        p["decay_lora_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(dec)).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+
+    if use_kernel:
+        from ..kernels import ops as kops
+
+        out = kops.rwkv6(r, k, v, w.astype(r.dtype), p["bonus_u"].astype(r.dtype))
+        new_state = wkv_state
+        if wkv_state is not None:  # decode path needs the state: use ref
+            from ..kernels import ref
+
+            out, new_state = ref.rwkv6(r, k, v, w, p["bonus_u"],
+                                       state=wkv_state, return_state=True)
+    else:
+        from ..kernels import ref
+
+        if t >= 32 and t % 32 == 0:
+            # chunked-matmul WKV (MXU-friendly; O(T/C·|S|) bwd memory)
+            out, new_state = ref.rwkv6_chunked(
+                r, k, v, w, p["bonus_u"], chunk=32, state=wkv_state,
+                return_state=True)
+        else:
+            out, new_state = ref.rwkv6(r, k, v, w, p["bonus_u"],
+                                       state=wkv_state, return_state=True)
+
+    o = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    o = rmsnorm(p["ln_x"], o, cfg.norm_eps)   # stand-in for per-head groupnorm
+    o = (o.astype(jnp.float32) * g).astype(dt)
+    o = o @ p["w_o"].astype(dt)
+    return o, x[:, -1, :], new_state
+
+
+def init_channel_mix(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mix_k": jnp.full((d,), 0.5, cfg.p_dtype),
+        "mix_r": jnp.full((d,), 0.5, cfg.p_dtype),
+        "w_ck": _init_dense(ks[0], d, f, cfg.p_dtype),
+        "w_cv": _init_dense(ks[1], f, d, cfg.p_dtype),
+        "w_cr": _init_dense(ks[2], d, d, cfg.p_dtype),
+    }
+
+
+def channel_mix(p, cfg, x, shift_state=None):
+    b, t, d = x.shape
+    dt = x.dtype
+    if shift_state is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([shift_state[:, None, :].astype(dt),
+                                x[:, :-1]], axis=1)
+    mk = p["mix_k"].astype(dt)
+    mr = p["mix_r"].astype(dt)
+    xk = x * mk + prev * (1 - mk)
+    xr = x * mr + prev * (1 - mr)
+    kk = jnp.square(jax.nn.relu((xk @ p["w_ck"].astype(dt))
+                                .astype(jnp.float32))).astype(dt)
+    rr = jax.nn.sigmoid((xr @ p["w_cr"].astype(dt)).astype(jnp.float32))
+    return (rr * (kk @ p["w_cv"].astype(dt)).astype(jnp.float32)).astype(dt), \
+        x[:, -1, :]
+
+
+def init_rwkv_layer(key, cfg):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+        "ln2": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+        "tm": init_time_mix(k1, cfg),
+        "cm": init_channel_mix(k2, cfg),
+    }
+
+
+def rwkv_layer(p, cfg, x, state=None, use_kernel=False):
+    """state = {'tm_shift': [B,D], 'cm_shift': [B,D], 'wkv': [B,H,dh,dh]}."""
+    tm_shift = cm_shift = wkv = None
+    if state is not None:
+        tm_shift, cm_shift, wkv = state["tm_shift"], state["cm_shift"], state["wkv"]
+    h, tm_shift2, wkv2 = time_mix(p["tm"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps),
+                                  tm_shift, wkv, use_kernel)
+    x = x + h
+    h, cm_shift2 = channel_mix(p["cm"], cfg, rmsnorm(p["ln2"], x, cfg.norm_eps),
+                               cm_shift)
+    x = x + h
+    new_state = {"tm_shift": tm_shift2, "cm_shift": cm_shift2, "wkv": wkv2}
+    return x, new_state
+
+
+def init_rwkv_state(cfg, batch: int):
+    h, dh = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    return {
+        "tm_shift": jnp.zeros((batch, cfg.d_model), cfg.act_dtype),
+        "cm_shift": jnp.zeros((batch, cfg.d_model), cfg.act_dtype),
+        "wkv": jnp.zeros((batch, h, dh, dh), jnp.float32),
+    }

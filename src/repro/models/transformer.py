@@ -1,0 +1,561 @@
+"""Model assembly: dense / MoE / RWKV-6 / hybrid / enc-dec / VLM forward
+passes, scan-stacked layers, remat policies, and decode-step variants."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import moe as MOE
+from . import rglru as RG
+from . import rwkv6 as RW
+from .config import ModelConfig
+from ..parallel.sharding import logical_constraint
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init/apply (dense & moe & hybrid-attention share structure)
+# ---------------------------------------------------------------------------
+def _init_mlp(key, cfg: ModelConfig):
+    if cfg.mlp_type == "gelu":
+        return L.init_gelu_mlp(key, cfg.d_model, cfg.d_ff, cfg.p_dtype)
+    return L.init_swiglu(key, cfg.d_model, cfg.d_ff, cfg.p_dtype)
+
+
+def _mlp(p, cfg: ModelConfig, x):
+    return L.gelu_mlp(p, x) if cfg.mlp_type == "gelu" else L.swiglu(p, x)
+
+
+def init_dense_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, cfg.p_dtype),
+        "attn": L.init_attention(k1, cfg),
+        "ln2": L.init_rmsnorm(cfg.d_model, cfg.p_dtype),
+        "mlp": _init_mlp(k2, cfg),
+    }
+
+
+def dense_layer(p, cfg: ModelConfig, x, positions, window=None):
+    h = L.attention_block(p["attn"], cfg, L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                          positions, causal=True, window=window)
+    x = x + h
+    h = _mlp(p["mlp"], cfg, L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x + h
+
+
+def dense_layer_decode(p, cfg, x, cache, window=None):
+    h, cache = L.attention_decode(p["attn"], cfg,
+                                  L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                                  cache, window=window)
+    x = x + h
+    h = _mlp(p["mlp"], cfg, L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x + h, cache
+
+
+def init_moe_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, cfg.p_dtype),
+        "attn": L.init_attention(k1, cfg),
+        "ln2": L.init_rmsnorm(cfg.d_model, cfg.p_dtype),
+        "moe": MOE.init_moe(k2, cfg),
+    }
+
+
+def moe_layer(p, cfg, x, positions, window=None):
+    h = L.attention_block(p["attn"], cfg, L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                          positions, causal=True, window=window)
+    x = x + h
+    h, aux = MOE.moe_block(p["moe"], cfg, L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x + h, aux
+
+
+def moe_layer_decode(p, cfg, x, cache, window=None):
+    h, cache = L.attention_decode(p["attn"], cfg,
+                                  L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                                  cache, window=window)
+    x = x + h
+    h, _ = MOE.moe_block(p["moe"], cfg, L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x + h, cache
+
+
+# ---------------------------------------------------------------------------
+# Stacked-layer init + scan-based forward
+# ---------------------------------------------------------------------------
+def _stacked_init(key, cfg, n, init_fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_fn(k, cfg))(keys)
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ks = iter(jax.random.split(key, 12))
+    p: dict = {"embed": L.init_embedding(next(ks), cfg.padded_vocab,
+                                         cfg.d_model, cfg.p_dtype),
+               "final_norm": (L.init_layernorm if cfg.family == "encdec"
+                              else L.init_rmsnorm)(cfg.d_model, cfg.p_dtype)}
+    if not cfg.tied_embeddings:
+        p["unembed"] = L.init_embedding(next(ks), cfg.padded_vocab,
+                                        cfg.d_model, cfg.p_dtype)
+
+    if cfg.family in ("dense", "vlm"):
+        p["layers"] = _stacked_init(next(ks), cfg, cfg.n_layers,
+                                    init_dense_layer)
+        if cfg.family == "vlm":
+            p["img_proj"] = L._init_dense(next(ks), cfg.d_model, cfg.d_model,
+                                          cfg.p_dtype)
+    elif cfg.family == "moe":
+        p["layers"] = _stacked_init(next(ks), cfg, cfg.n_layers, init_moe_layer)
+    elif cfg.family == "rwkv6":
+        p["layers"] = _stacked_init(next(ks), cfg, cfg.n_layers,
+                                    RW.init_rwkv_layer)
+    elif cfg.family == "hybrid":
+        n_super, rem = divmod(cfg.n_layers, len(cfg.block_pattern))
+        p["super"] = _stacked_init(next(ks), cfg, n_super,
+                                   _init_hybrid_super)
+        p["tail"] = [_init_hybrid_one(k, cfg, cfg.block_pattern[i])
+                     for i, k in enumerate(jax.random.split(next(ks), rem))]
+    elif cfg.family == "encdec":
+        p["enc_pos"] = (jax.random.normal(next(ks), (cfg.n_audio_frames,
+                                                     cfg.d_model),
+                                          jnp.float32) * 0.02).astype(cfg.p_dtype)
+        p["dec_pos"] = (jax.random.normal(next(ks), (cfg.max_positions,
+                                                     cfg.d_model),
+                                          jnp.float32) * 0.02).astype(cfg.p_dtype)
+        p["enc_layers"] = _stacked_init(next(ks), cfg, cfg.n_enc_layers,
+                                        _init_enc_layer)
+        p["dec_layers"] = _stacked_init(next(ks), cfg, cfg.n_layers,
+                                        _init_dec_layer)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+# -- hybrid super-block: pattern of rglru/attn layers ------------------------
+def _init_hybrid_one(key, cfg, kind):
+    k1, k2 = jax.random.split(key)
+    base = {"ln1": L.init_rmsnorm(cfg.d_model, cfg.p_dtype),
+            "ln2": L.init_rmsnorm(cfg.d_model, cfg.p_dtype),
+            "mlp": L.init_swiglu(k2, cfg.d_model, cfg.d_ff, cfg.p_dtype)}
+    if kind == "attn":
+        base["attn"] = L.init_attention(k1, cfg)
+    else:
+        base["rec"] = RG.init_rglru_block(k1, cfg)
+    return base
+
+
+def _init_hybrid_super(key, cfg):
+    keys = jax.random.split(key, len(cfg.block_pattern))
+    return [_init_hybrid_one(k, cfg, kind)
+            for k, kind in zip(keys, cfg.block_pattern)]
+
+
+def _hybrid_one(p, cfg, kind, x, positions, state=None, mode="train",
+                use_kernel=False):
+    """mode: train (no state) | prefill (fill state) | decode (step state)."""
+    xn = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind == "attn":
+        if mode == "decode":
+            h, state = L.attention_decode(p["attn"], cfg, xn, state,
+                                          window=cfg.local_window)
+        elif mode == "prefill":
+            h, state = L.attention_prefill(p["attn"], cfg, xn, positions,
+                                           state, window=cfg.local_window)
+        else:
+            h = L.attention_block(p["attn"], cfg, xn, positions, causal=True,
+                                  window=cfg.local_window)
+    else:
+        h, state = RG.rglru_block(p["rec"], cfg, xn,
+                                  state if mode != "train" else None,
+                                  use_kernel=use_kernel)
+    x = x + h
+    h = L.swiglu(p["mlp"], L.rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x + h, state
+
+
+# -- enc-dec layers (whisper: layernorm + gelu mlp + biasless rope-free) ----
+def _init_enc_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.init_layernorm(cfg.d_model, cfg.p_dtype),
+            "attn": L.init_attention(k1, cfg),
+            "ln2": L.init_layernorm(cfg.d_model, cfg.p_dtype),
+            "mlp": L.init_gelu_mlp(k2, cfg.d_model, cfg.d_ff, cfg.p_dtype)}
+
+
+def _init_dec_layer(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": L.init_layernorm(cfg.d_model, cfg.p_dtype),
+            "self_attn": L.init_attention(k1, cfg),
+            "ln_x": L.init_layernorm(cfg.d_model, cfg.p_dtype),
+            "cross_attn": L.init_attention(k2, cfg),
+            "ln2": L.init_layernorm(cfg.d_model, cfg.p_dtype),
+            "mlp": L.init_gelu_mlp(k3, cfg.d_model, cfg.d_ff, cfg.p_dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Forward passes (training / prefill)
+# ---------------------------------------------------------------------------
+def forward(params, cfg: ModelConfig, tokens, img_embeds=None,
+            audio_frames=None, use_kernel=False):
+    """tokens [B, T] -> logits [B, T, V] (+ aux loss for MoE)."""
+    dt = cfg.act_dtype
+    x = L.embed(params["embed"], tokens, dt)
+    x = logical_constraint(x, ("batch", None, None))
+    b, t, _ = x.shape
+    positions = jnp.arange(t)
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "vlm" and img_embeds is not None:
+        img = (img_embeds.astype(dt) @ params["img_proj"].astype(dt))
+        n_img = img.shape[1]
+        x = jnp.concatenate([img, x[:, n_img:]], axis=1)
+
+    def _apply_layers(x0, stacked, body):
+        """scan (compact HLO) or unrolled python loop (exact cost analysis —
+        XLA cost_analysis counts while bodies once, so the dry-run unrolls)."""
+        wrapped = _remat(body, cfg)
+        if cfg.scan_layers:
+            out, _ = jax.lax.scan(wrapped, x0, stacked)
+            return out
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        for i in range(n):
+            lp = jax.tree.map(lambda a: a[i], stacked)
+            x0, _ = wrapped(x0, lp)
+        return x0
+
+    if cfg.family in ("dense", "vlm"):
+        def body(carry, lp):
+            return dense_layer(lp, cfg, carry, positions,
+                               window=cfg.window), None
+
+        x = _apply_layers(x, params["layers"], body)
+    elif cfg.family == "moe":
+        def body(carry, lp):
+            x_, aux_ = carry
+            x_, a = moe_layer(lp, cfg, x_, positions, window=cfg.window)
+            return (x_, aux_ + a), None
+
+        x, aux = _apply_layers((x, aux), params["layers"], body)
+    elif cfg.family == "rwkv6":
+        def body(carry, lp):
+            out, _ = RW.rwkv_layer(lp, cfg, carry, use_kernel=use_kernel)
+            return out, None
+
+        x = _apply_layers(x, params["layers"], body)
+    elif cfg.family == "hybrid":
+        pat = cfg.block_pattern
+
+        def body(carry, lp):
+            for kind, sub in zip(pat, lp):
+                carry, _ = _hybrid_one(sub, cfg, kind, carry, positions,
+                                       use_kernel=use_kernel)
+            return carry, None
+
+        x = _apply_layers(x, params["super"], body)
+        for i, sub in enumerate(params["tail"]):
+            x, _ = _hybrid_one(sub, cfg, pat[i % len(pat)], x, positions,
+                               use_kernel=use_kernel)
+    elif cfg.family == "encdec":
+        enc = encode(params, cfg, audio_frames)
+        x = x + params["dec_pos"].astype(dt)[positions][None]
+
+        def dbody(carry, lp):
+            h = L.attention_block(lp["self_attn"], cfg,
+                                  L.layernorm(lp["ln1"], carry, cfg.norm_eps),
+                                  positions, causal=True, use_rope=False)
+            carry = carry + h
+            xn = L.layernorm(lp["ln_x"], carry, cfg.norm_eps)
+            kv = _cross_kv(lp["cross_attn"], cfg, enc)
+            h = L.attention_block(lp["cross_attn"], cfg, xn, positions,
+                                  causal=False, use_rope=False,
+                                  kv_override=kv)
+            carry = carry + h
+            h = L.gelu_mlp(lp["mlp"],
+                           L.layernorm(lp["ln2"], carry, cfg.norm_eps))
+            return carry + h, None
+
+        x = _apply_layers(x, params["dec_layers"], dbody)
+    else:
+        raise ValueError(cfg.family)
+
+    if cfg.family == "encdec":
+        x = L.layernorm(params["final_norm"], x, cfg.norm_eps)
+    else:
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    table = params["embed" if cfg.tied_embeddings else "unembed"]
+    logits = L.unembed(table, x)
+    return logits, aux
+
+
+def _cross_kv(p, cfg, enc):
+    """Project encoder output to cross-attention K/V heads."""
+    b, s, _ = enc.shape
+    hkv, dh = cfg.kv_heads, cfg.head_dim
+    dt = enc.dtype
+    k = (enc @ p["wk"].astype(dt)).reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    v = (enc @ p["wv"].astype(dt)).reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def encode(params, cfg: ModelConfig, audio_frames):
+    """Whisper encoder over precomputed frame embeddings (frontend stub)."""
+    dt = cfg.act_dtype
+    x = audio_frames.astype(dt) + params["enc_pos"].astype(dt)[None]
+    positions = jnp.arange(x.shape[1])
+
+    def ebody(carry, lp):
+        h = L.attention_block(lp["attn"], cfg,
+                              L.layernorm(lp["ln1"], carry, cfg.norm_eps),
+                              positions, causal=False, use_rope=False)
+        carry = carry + h
+        h = L.gelu_mlp(lp["mlp"], L.layernorm(lp["ln2"], carry, cfg.norm_eps))
+        return carry + h, None
+
+    x, _ = jax.lax.scan(ebody, x, params["enc_layers"])
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full-prompt forward that also fills decode caches (all families)
+# ---------------------------------------------------------------------------
+def prefill(params, cfg: ModelConfig, batch: dict, state,
+            use_kernel=False):
+    """batch['tokens'] [B, T] + init decode state -> (last-token logits
+    [B, 1, V], filled state).  One fused forward pass per family — no
+    token-by-token replay."""
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    dt = cfg.act_dtype
+    x = L.embed(params["embed"], tokens, dt)
+    positions = jnp.arange(t)
+
+    if cfg.family == "vlm" and batch.get("img_embeds") is not None:
+        img = (batch["img_embeds"].astype(dt) @ params["img_proj"].astype(dt))
+        x = jnp.concatenate([img, x[:, img.shape[1]:]], axis=1)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(carry, inp):
+            lp, cache = inp
+            xn = L.rmsnorm(lp["ln1"], carry, cfg.norm_eps)
+            h, cache = L.attention_prefill(lp["attn"], cfg, xn, positions,
+                                           cache, window=cfg.window)
+            carry = carry + h
+            xn2 = L.rmsnorm(lp["ln2"], carry, cfg.norm_eps)
+            if cfg.family == "moe":
+                h2, _ = MOE.moe_block(lp["moe"], cfg, xn2)
+            else:
+                h2 = _mlp(lp["mlp"], cfg, xn2)
+            return carry + h2, cache
+
+        x, state = _apply_layers_cache(cfg, x, params["layers"], state, body)
+    elif cfg.family == "rwkv6":
+        def body(carry, inp):
+            lp, st = inp
+            out, st = RW.rwkv_layer(lp, cfg, carry, state=st,
+                                    use_kernel=use_kernel)
+            return out, st
+
+        x, state = _apply_layers_cache(cfg, x, params["layers"], state, body)
+    elif cfg.family == "hybrid":
+        pat = cfg.block_pattern
+
+        def body(carry, inp):
+            lp, st = inp
+            new_st = []
+            for kind, sub, s in zip(pat, lp, st):
+                carry, s2 = _hybrid_one(sub, cfg, kind, carry, positions,
+                                        state=s, mode="prefill",
+                                        use_kernel=use_kernel)
+                new_st.append(s2)
+            return carry, new_st
+
+        x, new_super = _apply_layers_cache(cfg, x, params["super"],
+                                           state["super"], body)
+        tail_states = []
+        for i, (sub, s) in enumerate(zip(params["tail"], state["tail"])):
+            x, s2 = _hybrid_one(sub, cfg, pat[i % len(pat)], x, positions,
+                                state=s, mode="prefill", use_kernel=use_kernel)
+            tail_states.append(s2)
+        state = {"super": new_super, "tail": tail_states}
+    elif cfg.family == "encdec":
+        enc = encode(params, cfg, batch["audio_frames"]).astype(dt)
+        x = x + params["dec_pos"].astype(dt)[positions][None]
+
+        def body(carry, inp):
+            lp, cache = inp
+            xn = L.layernorm(lp["ln1"], carry, cfg.norm_eps)
+            h, cache = L.attention_prefill(lp["self_attn"], cfg, xn,
+                                           positions, cache, use_rope=False)
+            carry = carry + h
+            xn = L.layernorm(lp["ln_x"], carry, cfg.norm_eps)
+            kv = _cross_kv(lp["cross_attn"], cfg, enc)
+            h = L.attention_block(lp["cross_attn"], cfg, xn, positions,
+                                  causal=False, use_rope=False,
+                                  kv_override=kv)
+            carry = carry + h
+            h = L.gelu_mlp(lp["mlp"],
+                           L.layernorm(lp["ln2"], carry, cfg.norm_eps))
+            return carry + h, cache
+
+        x, new_self = _apply_layers_cache(cfg, x, params["dec_layers"],
+                                          state["self"], body)
+        state = {"self": new_self, "enc": enc}
+    else:
+        raise ValueError(cfg.family)
+
+    if cfg.family == "encdec":
+        x = L.layernorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    else:
+        x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    table = params["embed" if cfg.tied_embeddings else "unembed"]
+    return L.unembed(table, x), state
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token, stacked caches)
+# ---------------------------------------------------------------------------
+def init_decode_state(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.family in ("dense", "vlm", "moe"):
+        def one(_):
+            return L.init_kv_cache(cfg, batch, seq, window=cfg.window)
+
+        return jax.vmap(one)(jnp.arange(cfg.n_layers))
+    if cfg.family == "rwkv6":
+        def one(_):
+            return RW.init_rwkv_state(cfg, batch)
+
+        return jax.vmap(one)(jnp.arange(cfg.n_layers))
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern
+        n_super, rem = divmod(cfg.n_layers, len(pat))
+
+        def one_super(_):
+            return [L.init_kv_cache(cfg, batch, seq, window=cfg.local_window)
+                    if k == "attn" else RG.init_rglru_state(cfg, batch)
+                    for k in pat]
+
+        tail = [L.init_kv_cache(cfg, batch, seq, window=cfg.local_window)
+                if pat[i % len(pat)] == "attn" else RG.init_rglru_state(cfg, batch)
+                for i in range(rem)]
+        return {"super": jax.vmap(one_super)(jnp.arange(n_super)),
+                "tail": tail}
+    if cfg.family == "encdec":
+        def one(_):
+            return L.init_kv_cache(cfg, batch, seq)
+
+        return {"self": jax.vmap(one)(jnp.arange(cfg.n_layers)),
+                "enc": jnp.zeros((batch, cfg.n_audio_frames, cfg.d_model),
+                                 cfg.act_dtype)}
+    raise ValueError(cfg.family)
+
+
+def _apply_layers_cache(cfg, x, stacked_params, stacked_cache, body):
+    """Layer loop threading per-layer cache: scan or unrolled (see forward)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, x, (stacked_params, stacked_cache))
+    n = jax.tree.leaves(stacked_params)[0].shape[0]
+    new_caches = []
+    for i in range(n):
+        lp = jax.tree.map(lambda a: a[i], stacked_params)
+        ci = jax.tree.map(lambda a: a[i], stacked_cache)
+        x, c2 = body(x, (lp, ci))
+        new_caches.append(c2)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+    return x, stacked
+
+
+def decode_step(params, cfg: ModelConfig, token, state, use_kernel=False):
+    """token [B, 1] -> (logits [B, 1, V], new state)."""
+    dt = cfg.act_dtype
+    x = L.embed(params["embed"], token, dt)
+
+    if cfg.family in ("dense", "vlm"):
+        def body(carry, inp):
+            lp, cache = inp
+            out, cache = dense_layer_decode(lp, cfg, carry, cache,
+                                            window=cfg.window)
+            return out, cache
+
+        x, state = _apply_layers_cache(cfg, x, params["layers"], state, body)
+    elif cfg.family == "moe":
+        def body(carry, inp):
+            lp, cache = inp
+            out, cache = moe_layer_decode(lp, cfg, carry, cache,
+                                          window=cfg.window)
+            return out, cache
+
+        x, state = _apply_layers_cache(cfg, x, params["layers"], state, body)
+    elif cfg.family == "rwkv6":
+        def body(carry, inp):
+            lp, st = inp
+            out, st = RW.rwkv_layer(lp, cfg, carry, state=st)
+            return out, st
+
+        x, state = _apply_layers_cache(cfg, x, params["layers"], state, body)
+    elif cfg.family == "hybrid":
+        pat = cfg.block_pattern
+
+        def body(carry, inp):
+            lp, st = inp
+            new_st = []
+            for kind, sub, s in zip(pat, lp, st):
+                carry, s2 = _hybrid_one(sub, cfg, kind, carry, None, state=s,
+                                        mode="decode")
+                new_st.append(s2)
+            return carry, new_st
+
+        x, new_super = _apply_layers_cache(cfg, x, params["super"],
+                                           state["super"], body)
+        tail_states = []
+        for i, (sub, s) in enumerate(zip(params["tail"], state["tail"])):
+            x, s2 = _hybrid_one(sub, cfg, pat[i % len(pat)], x, None,
+                                state=s, mode="decode")
+            tail_states.append(s2)
+        state = {"super": new_super, "tail": tail_states}
+    elif cfg.family == "encdec":
+        enc = state["enc"]
+
+        def body(carry, inp):
+            lp, cache = inp
+            h, cache = L.attention_decode(
+                lp["self_attn"], cfg,
+                L.layernorm(lp["ln1"], carry, cfg.norm_eps), cache,
+                use_rope=False)
+            carry = carry + h
+            xn = L.layernorm(lp["ln_x"], carry, cfg.norm_eps)
+            kv = _cross_kv(lp["cross_attn"], cfg, enc.astype(carry.dtype))
+            h = L.attention_block(lp["cross_attn"], cfg, xn,
+                                  jnp.zeros((1,), jnp.int32), causal=False,
+                                  use_rope=False, kv_override=kv)
+            carry = carry + h
+            h = L.gelu_mlp(lp["mlp"],
+                           L.layernorm(lp["ln2"], carry, cfg.norm_eps))
+            return carry + h, cache
+
+        pos = state["self"]["pos"][0] if isinstance(state["self"], dict) else 0
+        x = x + params["dec_pos"].astype(dt)[pos][None, None]
+        x, new_self = _apply_layers_cache(cfg, x, params["dec_layers"],
+                                          state["self"], body)
+        state = {"self": new_self, "enc": enc}
+    else:
+        raise ValueError(cfg.family)
+
+    if cfg.family == "encdec":
+        x = L.layernorm(params["final_norm"], x, cfg.norm_eps)
+    else:
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    table = params["embed" if cfg.tied_embeddings else "unembed"]
+    return L.unembed(table, x), state

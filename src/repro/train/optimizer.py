@@ -1,0 +1,105 @@
+"""AdamW from scratch + LR schedules + global-norm clipping.
+
+Optimizer state mirrors the parameter sharding (first/second moments adopt
+each param's layout), so FSDP shards the optimizer exactly like ZeRO-1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    schedule: str = "cosine"      # cosine | linear | constant
+
+
+def lr_at(cfg: AdamWConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    else:
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                        0.0, 1.0)
+        if cfg.schedule == "cosine":
+            decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) \
+                * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        else:
+            decay = 1.0 - (1 - cfg.min_lr_ratio) * frac
+    return cfg.lr * warm * decay
+
+
+def init_opt_state(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return {"mu": zeros,
+            "nu": jax.tree.map(jnp.copy, zeros),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms/biases/1-d params."""
+    name = ""
+    for part in reversed(path):
+        k = getattr(part, "key", None)
+        if isinstance(k, str):
+            name = k
+            break
+    return not (name in ("scale", "bias") or name.startswith("b"))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else 1.0
+    count = state["count"] + 1
+    lr = lr_at(cfg, count)
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    flat_p = jax.tree_util.tree_flatten_with_path(params)
+    treedef = flat_p[1]
+    paths = [p for p, _ in flat_p[0]]
+    p_leaves = [l for _, l in flat_p[0]]
+    g_leaves = jax.tree.leaves(grads)
+    mu_leaves = jax.tree.leaves(state["mu"])
+    nu_leaves = jax.tree.leaves(state["nu"])
+
+    new_p, new_mu, new_nu = [], [], []
+    for path, p, g, mu, nu in zip(paths, p_leaves, g_leaves, mu_leaves,
+                                  nu_leaves):
+        gf = g.astype(jnp.float32) * scale
+        mu2 = cfg.b1 * mu + (1 - cfg.b1) * gf
+        nu2 = cfg.b2 * nu + (1 - cfg.b2) * gf * gf
+        upd = (mu2 / c1) / (jnp.sqrt(nu2 / c2) + cfg.eps)
+        if cfg.weight_decay and _decay_mask(path):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_mu.append(mu2)
+        new_nu.append(nu2)
+
+    params2 = jax.tree_util.tree_unflatten(treedef, new_p)
+    state2 = {"mu": jax.tree_util.tree_unflatten(treedef, new_mu),
+              "nu": jax.tree_util.tree_unflatten(treedef, new_nu),
+              "count": count}
+    return params2, state2, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,7 @@
+# NOTE: no XLA_FLAGS / device-count overrides here — smoke tests and benches
+# must see the real (single) device.  Only launch/dryrun.py (and the
+# dedicated subprocess tests) force 512 host devices.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

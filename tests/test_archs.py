@@ -1,0 +1,91 @@
+"""Per-assigned-architecture smoke tests: reduced config, one train step on
+CPU, output shapes + no NaNs.  FULL configs are exercised only via the
+dry-run (ShapeDtypeStruct, no allocation)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, input_specs, long_ok
+from repro.models import make_model
+
+
+def _batch(cfg, b, t, rng):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, t)))}
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_img_tokens, cfg.d_model)), jnp.float32)
+    if cfg.family == "encdec":
+        batch["audio_frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_audio_frames, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_train_step(arch):
+    cfg = get_config(arch, reduced=True)
+    m = make_model(cfg)
+    params = m.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    b, t = 2, 32
+    batch = _batch(cfg, b, t, rng)
+    logits, aux = jax.jit(m.logits)(params, batch)
+    assert logits.shape == (b, t, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    loss, grads = jax.jit(jax.value_and_grad(m.loss))(params, batch)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_decode(arch):
+    cfg = get_config(arch, reduced=True)
+    m = make_model(cfg)
+    params = m.init(jax.random.key(1))
+    rng = np.random.default_rng(1)
+    b, t = 2, 16
+    batch = _batch(cfg, b, t, rng)
+    st = m.init_decode_state(b, 32)
+    logits, st = jax.jit(m.prefill)(params, batch, st)
+    assert logits.shape == (b, 1, cfg.vocab)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None]
+    logits2, st = jax.jit(m.decode_step)(params, tok, st)
+    assert logits2.shape == (b, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+def test_full_param_counts_match_literature():
+    """Exact configs must land near the published parameter counts."""
+    expected_b = {
+        "qwen2.5-14b": (14.0, 15.5), "llama3.2-1b": (1.1, 1.4),
+        "granite-20b": (19.0, 21.5), "qwen3-0.6b": (0.55, 0.78),
+        "rwkv6-3b": (2.9, 3.5), "mixtral-8x22b": (135.0, 145.0),
+        "qwen2-moe-a2.7b": (13.5, 15.0), "recurrentgemma-2b": (2.4, 2.9),
+        "whisper-tiny": (0.03, 0.05), "phi-3-vision-4.2b": (3.6, 4.3),
+    }
+    for arch, (lo, hi) in expected_b.items():
+        n = get_config(arch).param_count() / 1e9
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_input_specs_cover_every_cell():
+    total = 0
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            if sname == "long_500k" and not long_ok(cfg):
+                continue
+            specs = input_specs(cfg, shape)
+            leaves = jax.tree.leaves(specs)
+            assert leaves and all(hasattr(l, "shape") for l in leaves)
+            total += 1
+    assert total == 10 * 3 + 3  # 3 shapes everywhere + long_500k for 3 archs
+
+
+def test_long_500k_skip_policy():
+    ok = [a for a in ARCH_IDS if long_ok(get_config(a))]
+    assert sorted(ok) == ["mixtral-8x22b", "recurrentgemma-2b", "rwkv6-3b"]

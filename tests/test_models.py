@@ -1,0 +1,126 @@
+"""Model-family behaviour: loss/grad sanity + decode == teacher forcing."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import ModelConfig, make_model
+
+BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+            vocab=256, dtype="float32")
+
+CONFIGS = {
+    "dense": ModelConfig(name="dense", family="dense", **BASE),
+    "qwen_style": ModelConfig(name="qwen", family="dense", qkv_bias=True,
+                              qk_norm=True, tied_embeddings=True, **BASE),
+    "swa": ModelConfig(name="swa", family="dense", window=8, **BASE),
+    "gelu": ModelConfig(name="gelu", family="dense", mlp_type="gelu", **BASE),
+    "moe": ModelConfig(name="moe", family="moe", n_experts=4, top_k=2,
+                       capacity_factor=2.0, **BASE),
+    "moe_shared": ModelConfig(name="moes", family="moe", n_experts=8,
+                              top_k=2, n_shared_experts=2, d_expert_ff=32,
+                              capacity_factor=4.0, **BASE),
+    "rwkv": ModelConfig(name="rwkv", family="rwkv6", rwkv_head_dim=16,
+                        rwkv_mix_lora=8, rwkv_decay_lora=8, **BASE),
+    "hybrid": ModelConfig(name="hyb", family="hybrid",
+                          block_pattern=("rglru", "rglru", "attn"),
+                          local_window=8, rglru_d_state=64,
+                          **{**BASE, "n_kv_heads": 1}),
+    "encdec": ModelConfig(name="enc", family="encdec", n_enc_layers=2,
+                          n_audio_frames=16, max_positions=128, **BASE),
+    "vlm": ModelConfig(name="vlm", family="vlm", n_img_tokens=8, **BASE),
+}
+
+
+def _batch(cfg, b, t, rng):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, t)))}
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_img_tokens, cfg.d_model)), jnp.float32)
+    if cfg.family == "encdec":
+        batch["audio_frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.n_audio_frames, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_loss_and_grads_finite(name):
+    cfg = CONFIGS[name]
+    m = make_model(cfg)
+    params = m.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    loss, grads = jax.jit(jax.value_and_grad(m.loss))(
+        params, _batch(cfg, 2, 32, rng))
+    assert np.isfinite(float(loss))
+    for leaf in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+    # ballpark: random init ≈ uniform over vocab
+    assert abs(float(loss) - np.log(cfg.vocab)) < 1.0
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_decode_matches_teacher_forcing(name):
+    cfg = CONFIGS[name]
+    m = make_model(cfg)
+    params = m.init(jax.random.key(1))
+    rng = np.random.default_rng(1)
+    B, T = 2, 24
+    batch_full = _batch(cfg, B, T + 4, rng)
+    batch_pre = dict(batch_full, tokens=batch_full["tokens"][:, :T])
+    full_logits, _ = jax.jit(m.logits)(params, batch_full)
+    st = m.init_decode_state(B, T + 8)
+    pl, st = jax.jit(m.prefill)(params, batch_pre, st)
+    np.testing.assert_allclose(
+        np.asarray(pl[:, -1], np.float32),
+        np.asarray(full_logits[:, T - 1], np.float32), atol=2e-3, rtol=1e-3)
+    decode = jax.jit(m.decode_step)
+    for i in range(4):
+        tok = batch_full["tokens"][:, T + i][:, None]
+        lg, st = decode(params, tok, st)
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0], np.float32),
+            np.asarray(full_logits[:, T + i], np.float32),
+            atol=2e-3, rtol=1e-3)
+
+
+def test_unrolled_matches_scanned():
+    cfg = CONFIGS["dense"]
+    m_scan = make_model(cfg.with_(scan_layers=True))
+    m_unroll = make_model(cfg.with_(scan_layers=False))
+    params = m_scan.init(jax.random.key(2))
+    rng = np.random.default_rng(2)
+    batch = _batch(cfg, 2, 16, rng)
+    l1 = float(jax.jit(m_scan.loss)(params, batch))
+    l2 = float(jax.jit(m_unroll.loss)(params, batch))
+    assert abs(l1 - l2) < 1e-5
+
+
+def test_remat_matches_no_remat():
+    cfg = CONFIGS["dense"]
+    m0 = make_model(cfg)
+    m1 = make_model(cfg.with_(remat="full"))
+    params = m0.init(jax.random.key(3))
+    rng = np.random.default_rng(3)
+    batch = _batch(cfg, 2, 16, rng)
+    g0 = jax.jit(jax.grad(m0.loss))(params, batch)
+    g1 = jax.jit(jax.grad(m1.loss))(params, batch)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-5, rtol=1e-4)
+
+
+def test_flash_attention_path_matches_xla():
+    cfg = CONFIGS["dense"].with_(attn_impl="flash")
+    m_flash = make_model(cfg)
+    m_xla = make_model(cfg.with_(attn_impl="xla"))
+    params = m_xla.init(jax.random.key(4))
+    rng = np.random.default_rng(4)
+    batch = _batch(cfg, 2, 32, rng)
+    lf, _ = m_flash.logits(params, batch)
+    lx, _ = m_xla.logits(params, batch)
+    np.testing.assert_allclose(np.asarray(lf, np.float32),
+                               np.asarray(lx, np.float32),
+                               atol=2e-3, rtol=1e-3)

@@ -1,0 +1,94 @@
+"""Cost model + physical optimizer unit behaviour."""
+
+import numpy as np
+
+from repro.core import flow as F
+from repro.core.cost import estimate
+from repro.core.operators import Hints
+from repro.core.physical import Ctx, Props, best_physical, candidates
+from repro.core.record import Schema
+
+
+def _q15ish(li_rows, su_rows):
+    li = F.source("L", Schema.of(k=np.int64, v=np.float64),
+                  num_records=li_rows)
+    su = F.source("S", Schema.of(sk=np.int64, nm=np.int64),
+                  num_records=su_rows)
+    return F.match(li, su, ["k"], ["sk"], name="J",
+                   hints=Hints(pk_side="right")), li, su
+
+
+def test_cardinality_estimates():
+    j, li, su = _q15ish(1_000_000, 1_000)
+    st = estimate(j)
+    assert st.rows == 1_000_000  # FK side preserved under PK join
+
+    def filt(ir, out):
+        out.emit(ir.copy(), where=ir.get("v") > 0)
+
+    m = F.map_(li, filt, name="F", hints=Hints(selectivity=0.1))
+    assert estimate(m).rows == 100_000
+
+
+def test_broadcast_wins_for_small_side():
+    j, *_ = _q15ish(100_000_000, 1_000)
+    plan = best_physical(j, Ctx(dop=32))
+    assert plan.ship == ("forward", "broadcast")
+
+
+def test_partition_wins_for_balanced_sides():
+    j, *_ = _q15ish(50_000_000, 40_000_000)
+    plan = best_physical(j, Ctx(dop=32))
+    assert "broadcast" not in plan.ship
+
+
+def test_interesting_property_reuse():
+    """A Reduce on the same key downstream of a partitioned Match reuses the
+    partitioning (forward, no second shuffle) — Volcano-style DP."""
+    li = F.source("L", Schema.of(k=np.int64, v=np.float64),
+                  num_records=50_000_000)
+    su = F.source("S", Schema.of(sk=np.int64, nm=np.int64),
+                  num_records=40_000_000)
+    j = F.match(li, su, ["k"], ["sk"], name="J")
+
+    def agg(g, out):
+        out.emit(g.keys().set("s", g.sum("v")))
+
+    r = F.reduce_(j, ["k"], agg, name="R", hints=Hints(distinct_keys=100_000))
+    plan = best_physical(r, Ctx(dop=32))
+    assert plan.ship == ("forward",)          # reuses the join partitioning
+    assert plan.local in ("sort", "reuse-sort")
+
+
+def test_source_partitioning_respected():
+    li = F.source("L", Schema.of(k=np.int64, v=np.float64),
+                  num_records=10_000_000, partitioned_on=("k",))
+
+    def agg(g, out):
+        out.emit(g.keys().set("s", g.sum("v")))
+
+    r = F.reduce_(li, ["k"], agg, name="R")
+    plan = best_physical(r, Ctx(dop=32))
+    assert plan.ship == ("forward",)
+
+
+def test_props_partition_semantics():
+    p = Props(partitions=frozenset({frozenset({"a"})}), sort=("a", "b"))
+    assert p.partitioned_on(frozenset({"a", "b"}))     # subset key co-located
+    assert not p.partitioned_on(frozenset({"b"}))
+    assert p.sorted_on(frozenset({"a"}))
+    assert p.sorted_on(frozenset({"a", "b"}))
+    assert not p.sorted_on(frozenset({"b"}))
+
+
+def test_pareto_keeps_property_plans():
+    li = F.source("L", Schema.of(k=np.int64, v=np.float64),
+                  num_records=50_000_000)
+    su = F.source("S", Schema.of(sk=np.int64, nm=np.int64),
+                  num_records=1_000)
+    j = F.match(li, su, ["k"], ["sk"], name="J", hints=Hints(pk_side="right"))
+    cands = candidates(j, Ctx(dop=32))
+    # broadcast is cheapest, but the partitioned variant must survive because
+    # it offers co-located keys to downstream consumers
+    assert len(cands) >= 2
+    assert any(p.partitioned_on(frozenset({"k"})) for p in cands)

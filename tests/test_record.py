@@ -1,0 +1,38 @@
+import numpy as np
+import pytest
+
+from repro.core.record import RecordBatch, Schema, batch_from_dict
+
+
+def test_schema_basics():
+    s = Schema.of(a=np.int64, b=np.float64)
+    assert s.fields == ("a", "b")
+    assert s.width_bytes() == 16
+    assert "a" in s and "c" not in s
+    s2 = s.extend(c=np.int32)
+    assert s2.fields == ("a", "b", "c")
+    assert s.project(["b"]).fields == ("b",)
+    with pytest.raises(ValueError):
+        s.union(Schema.of(a=np.int64))
+    assert s.rename({"a": "x"}).fields == ("x", "b")
+
+
+def test_batch_mask_and_compact():
+    b = batch_from_dict({"a": [1, 2, 3, 4]}, valid=np.array([1, 0, 1, 0], bool))
+    assert b.capacity == 4 and b.num_valid() == 2
+    c = b.compact()
+    assert c.capacity == 2 and c.valid is None
+    assert c["a"].tolist() == [1, 3]
+
+
+def test_multiset_equivalence_is_order_insensitive():
+    b1 = batch_from_dict({"a": [3, 1, 2], "b": [0.3, 0.1, 0.2]})
+    b2 = batch_from_dict({"b": [0.1, 0.2, 0.3], "a": [1, 2, 3]})
+    assert b1.equivalent(b2)
+    b3 = batch_from_dict({"a": [1, 2, 2], "b": [0.1, 0.2, 0.3]})
+    assert not b1.equivalent(b3)
+
+
+def test_ragged_columns_rejected():
+    with pytest.raises(ValueError):
+        RecordBatch({"a": np.zeros(3), "b": np.zeros(4)})

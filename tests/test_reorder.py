@@ -1,0 +1,158 @@
+"""Unit tests for the reordering conditions (paper Sec. 4)."""
+
+import numpy as np
+
+from repro.core import flow as F
+from repro.core import executor
+from repro.core.enumeration import enumerate_plans
+from repro.core.operators import Hints, MatchOp, ReduceOp
+from repro.core.record import Schema, batch_from_dict
+from repro.core.reorder import (commute, pull_unary_from_binary,
+                                push_unary_into_binary, reorderable, roc,
+                                rotate, swap_unary)
+
+S_AB = Schema.of(A=np.int64, B=np.int64)
+
+
+def _maps():
+    def f1(ir, out):
+        out.emit(ir.copy().set("B", abs(ir.get("B"))))
+
+    def f2(ir, out):
+        out.emit(ir.copy(), where=ir.get("A") >= 0)
+
+    def f3(ir, out):
+        out.emit(ir.copy().set("A", ir.get("A") + ir.get("B")))
+
+    src = F.source("I", S_AB)
+    m1 = F.map_(src, f1, name="M1")
+    m2 = F.map_(m1, f2, name="M2")
+    m3 = F.map_(m2, f3, name="M3")
+    return src, m1, m2, m3
+
+
+def test_theorem1_roc_decides_map_swap():
+    src, m1, m2, m3 = _maps()
+    assert roc(m2, m1) and reorderable(m2, m1)      # no conflict
+    assert not roc(m3, m1)                          # W1 ∩ R3 = {B}
+    assert swap_unary(m2, m1) is not None
+    # rebuilt tree keeps semantics
+    t = swap_unary(m2, m1)
+    assert t.op_names()[0] == "M1"  # M1 now root of the subtree
+
+
+def test_theorem2_kgp_required():
+    src = F.source("I", S_AB)
+
+    def filt_key(ir, out):
+        out.emit(ir.copy(), where=ir.get("A") > 0)
+
+    def filt_nonkey(ir, out):
+        out.emit(ir.copy(), where=ir.get("B") > 0)
+
+    def agg(g, out):
+        out.emit(g.keys().set("s", g.sum("B")))
+
+    r_key = F.reduce_(F.map_(src, filt_key, name="FK"), ["A"], agg, name="R")
+    r_non = F.reduce_(F.map_(src, filt_nonkey, name="FN"), ["A"], agg, name="R")
+    assert swap_unary(r_key, r_key.child) is not None   # filter on key: OK
+    assert swap_unary(r_non, r_non.child) is None       # KGP fails
+
+
+def test_invariant_grouping_needs_pk():
+    li = F.source("L", Schema.of(k=np.int64, v=np.float64))
+    su = F.source("S", Schema.of(sk=np.int64, nm=np.int64), num_records=10)
+
+    def agg(g, out):
+        out.emit(g.keys().set("s", g.sum("v")))
+
+    for pk, expect in (("right", True), (None, False)):
+        j = F.match(F.reduce_(li, ["k"], agg, name="R"), su, ["k"], ["sk"],
+                    name="J", hints=Hints(pk_side=pk))
+        got = pull_unary_from_binary(j, 0)
+        assert (got is not None) == expect, pk
+        if got is not None:
+            assert isinstance(got, ReduceOp)
+            assert got.attrs() == j.attrs()  # schema preserved (extension)
+
+
+def test_push_map_requires_single_side_refs():
+    l = F.source("L", Schema.of(a=np.int64, k=np.int64))
+    r = F.source("R", Schema.of(b=np.int64, j=np.int64))
+    j = F.match(l, r, ["k"], ["j"], name="J")
+
+    def left_only(ir, out):
+        out.emit(ir.copy(), where=ir.get("a") > 0)
+
+    def both_sides(ir, out):
+        out.emit(ir.copy(), where=ir.get("a") > ir.get("b"))
+
+    ml = F.map_(j, left_only, name="ML")
+    mb = F.map_(j, both_sides, name="MB")
+    assert push_unary_into_binary(ml, j, 0) is not None
+    assert push_unary_into_binary(ml, j, 1) is None
+    assert push_unary_into_binary(mb, j, 0) is None
+    assert push_unary_into_binary(mb, j, 1) is None
+
+
+def test_rotation_lemma1():
+    a = F.source("A", Schema.of(k1=np.int64, x=np.int64))
+    b = F.source("B", Schema.of(k1b=np.int64, k2=np.int64))
+    c = F.source("C", Schema.of(k2c=np.int64, z=np.int64))
+    j1 = F.match(a, b, ["k1"], ["k1b"], name="J1")
+    j2 = F.match(j1, c, ["k2"], ["k2c"], name="J2")  # key k2 lives in B
+    t = rotate(j2, 0)
+    assert t is not None and isinstance(t, MatchOp)
+    assert t.name == "J1"  # J1 hoisted to root: A ⋈1 (B ⋈2 C)
+    # rotation whose parent key refers to the OTHER side is rejected
+    j2x = F.match(j1, c, ["x"], ["k2c"], name="J2x")  # x lives in A
+    assert rotate(j2x, 0) is None
+
+
+def test_commute_swaps_sides_and_udf_args():
+    l = F.source("L", Schema.of(a=np.int64, k=np.int64))
+    r = F.source("R", Schema.of(b=np.int64, j=np.int64))
+    j = F.match(l, r, ["k"], ["j"], name="J", hints=Hints(pk_side="right"))
+    cj = commute(j)
+    assert cj.left.name == "R" and cj.right.name == "L"
+    assert cj.left_key == ("j",) and cj.hints.pk_side == "left"
+    ld = batch_from_dict({"a": np.arange(5), "k": np.arange(5) % 3})
+    rd = batch_from_dict({"b": np.arange(3) * 10, "j": np.arange(3)})
+    out1 = executor.execute(j, {"L": ld, "R": rd})
+    out2 = executor.execute(cj, {"L": ld, "R": rd})
+    assert out1.equivalent(out2)
+
+
+def test_schema_dependent_blocks_swaps():
+    from repro.core.udf import UdfProperties
+    from repro.core.udf import Card
+
+    src = F.source("I", S_AB)
+
+    def adder(ir, out):  # adds attribute C
+        out.emit(ir.copy().set("C", ir.get("A") * 2))
+
+    def dynamic(ir, out):
+        _ = ir.fields
+        out.emit(ir.copy(), where=ir.get("B") > 0)
+
+    m1 = F.map_(src, adder, name="ADD")
+    m2 = F.map_(m1, dynamic, name="DYN")
+    assert m2.props.schema_dependent
+    assert swap_unary(m2, m1) is None  # ADD changes schema under DYN
+
+    def pure(ir, out):
+        out.emit(ir.copy(), where=ir.get("B") > 0)
+
+    m2p = F.map_(m1, pure, name="PURE")
+    assert swap_unary(m2p, m1) is not None
+
+
+def test_enumeration_counts_on_paper_flows():
+    from repro.configs import flows
+
+    expected = {"q7": 41, "q15": 3, "clickstream": 9, "textmining": 24}
+    for name, want in expected.items():
+        root, _ = flows.FLOWS[name]()
+        plans = enumerate_plans(root, include_commutes=False)
+        assert len(plans) == want, (name, len(plans))

@@ -1,0 +1,113 @@
+"""SCA analyzers on the paper's Sec. 3/5 example functions + safety checks."""
+
+import numpy as np
+import pytest
+
+from repro.core.record import Schema
+from repro.core.sca import analyze_udf
+from repro.core.sca import bytecode as bc
+from repro.core.sca import jaxpr_sca as jx
+from repro.core.udf import Card, KatEmit
+
+SCHEMA = Schema.of(A=np.int64, B=np.int64)
+
+
+def f1(ir, out):  # B := |B|     (paper Sec. 3)
+    out.emit(ir.copy().set("B", abs(ir.get("B"))))
+
+
+def f2(ir, out):  # filter A >= 0
+    out.emit(ir.copy(), where=ir.get("A") >= 0)
+
+
+def f3(ir, out):  # A := A + B
+    out.emit(ir.copy().set("A", ir.get("A") + ir.get("B")))
+
+
+@pytest.mark.parametrize("mode", ["bytecode", "jaxpr"])
+def test_paper_sec3_read_write_sets(mode):
+    p1 = analyze_udf(f1, "map", [SCHEMA], mode=mode)
+    p2 = analyze_udf(f2, "map", [SCHEMA], mode=mode)
+    p3 = analyze_udf(f3, "map", [SCHEMA], mode=mode)
+    assert p1.reads == {"B"} and p1.writes == {"B"}
+    assert p2.reads == {"A"} and p2.writes == set()
+    assert p3.reads == {"A", "B"} and p3.writes == {"A"}
+    assert p2.card is Card.AT_MOST_ONE
+    assert p1.card is Card.ONE and p3.card is Card.ONE
+    assert p2.filter_fields == {"A"}
+
+
+def test_explicit_copy_not_a_write():
+    def copier(ir, out):
+        out.emit(ir.copy().set("A", ir.get("A")))
+
+    p = analyze_udf(copier, "map", [SCHEMA], mode="jaxpr")
+    assert "A" not in p.writes
+
+
+def test_implicit_projection_drops():
+    def proj(ir, out):
+        b = ir.get("B")
+        from repro.core.udf import empty
+
+        out.emit(empty().set("B2", b * 2))
+
+    p = analyze_udf(proj, "map", [SCHEMA], mode="jaxpr")
+    assert p.adds == {"B2"}
+    assert {"A", "B"} <= p.drops
+    assert not p.implicit_copy
+
+
+def test_kat_classification():
+    def agg(g, out):
+        out.emit(g.keys().set("s", g.sum("B")))
+
+    def passthrough_filter(g, out):
+        out.emit_records(where=g.any(g.get("B") > 0))
+
+    pa = analyze_udf(agg, "reduce", [SCHEMA], key=("A",), mode="jaxpr")
+    assert pa.kat_emit is KatEmit.PER_GROUP
+    assert "A" in pa.reads  # keys always read
+    pf = analyze_udf(passthrough_filter, "reduce", [SCHEMA], key=("A",),
+                     mode="jaxpr")
+    assert pf.kat_emit is KatEmit.PASSTHROUGH_FILTER
+    assert pf.writes == set()
+
+
+def test_bytecode_is_conservative_superset_of_jaxpr():
+    """Safety through conservatism (Sec. 5): the static estimate must be a
+    superset of the exact (traced) property sets."""
+    for udf in (f1, f2, f3):
+        pb = analyze_udf(udf, "map", [SCHEMA], mode="bytecode")
+        pj = analyze_udf(udf, "map", [SCHEMA], mode="jaxpr")
+        assert pb.is_superset_of(pj), udf.__name__
+
+
+def test_schema_dependent_detection():
+    def dynamic(ir, out):
+        cols = ir.fields  # schema reflection
+        out.emit(ir.copy())
+
+    assert bc.is_schema_dependent(dynamic)
+    assert not bc.is_schema_dependent(f1)
+    p = analyze_udf(dynamic, "map", [SCHEMA], mode="auto")
+    assert p.schema_dependent
+
+
+def test_dynamic_set_name_rejected():
+    def bad(ir, out):
+        name = "A" if len(ir.fields) else "B"
+        out.emit(ir.copy().set(name, ir.get("A")))
+
+    with pytest.raises(ValueError):
+        bc.analyze(bad, ["A", "B"])
+
+
+def test_match_keys_join_read_set():
+    def join(l, r, out):
+        out.emit(l.concat(r))
+
+    s2 = Schema.of(K=np.int64, V=np.int64)
+    p = analyze_udf(join, "match", [SCHEMA, s2], left_key=("A",),
+                    right_key=("K",), mode="jaxpr")
+    assert {"A", "K"} <= p.reads
