@@ -13,7 +13,8 @@ from . import common
 
 def run(n: int = 60_000, dop: int = 32, quick: bool = False):
     root, bindings = flows.clickstream()
-    res = optimize(root, Ctx(dop=dop), include_commutes=False)
+    res = optimize(root, Ctx(dop=dop), include_commutes=False,
+                   prune=False)  # figures need the full cost spectrum
     b = bindings(n if not quick else 10_000, seed=0)
     rows = []
     for rank, rp in enumerate(res.ranked, 1):

@@ -12,7 +12,8 @@ from . import common
 
 def run(n: int = 40_000, dop: int = 32, quick: bool = False):
     root, bindings = flows.q7()
-    res = optimize(root, Ctx(dop=dop), include_commutes=False)
+    res = optimize(root, Ctx(dop=dop), include_commutes=False,
+                   prune=False)  # figures need the full cost spectrum
     b = bindings(n if not quick else 8000, seed=0)
     rows = common.rank_interval_rows(res, b, k=10,
                                      repeats=1 if quick else 3)

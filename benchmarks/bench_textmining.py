@@ -12,7 +12,8 @@ from . import common
 
 def run(n: int = 60_000, dop: int = 32, quick: bool = False):
     root, bindings = flows.textmining()
-    res = optimize(root, Ctx(dop=dop), include_commutes=False)
+    res = optimize(root, Ctx(dop=dop), include_commutes=False,
+                   prune=False)  # figures need the full cost spectrum
     b = bindings(n if not quick else 10_000, seed=0)
     rows = common.rank_interval_rows(res, b, k=10, repeats=1 if quick else 3)
     rho = common.spearman([r["est_cost_norm"] for r in rows],

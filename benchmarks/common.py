@@ -49,9 +49,12 @@ def spearman(xs, ys) -> float:
 
 
 def print_rows(name: str, rows: list[dict]):
-    cols = list(rows[0].keys()) if rows else []
+    cols: list = []
+    for r in rows:  # union of keys, first-seen order (rows may differ)
+        cols.extend(k for k in r if k not in cols)
     print(f"\n== {name} ==")
     print(",".join(cols))
     for r in rows:
-        print(",".join(f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
-                       for c in cols))
+        print(",".join(
+            f"{r[c]:.4g}" if isinstance(r.get(c), float) else str(r.get(c, ""))
+            for c in cols))

@@ -1,13 +1,44 @@
 """Run every benchmark (one per paper table/figure) and print a summary.
 
     PYTHONPATH=src python -m benchmarks.run [--quick]
+
+The enumeration benchmark's rows are also written to BENCH_enumeration.json
+(next to this file's repo root) so the enumeration+costing perf trajectory
+is tracked across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import platform
 import sys
 import time
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# full runs maintain the committed perf baseline; --quick runs (CI smoke)
+# write next to it so they never clobber the cross-PR trajectory
+_BASELINE = os.path.join(_REPO_ROOT, "BENCH_enumeration.json")
+_BASELINE_QUICK = os.path.join(_REPO_ROOT, "BENCH_enumeration.quick.json")
+
+
+def _write_enumeration_baseline(summary: dict, quick: bool) -> None:
+    doc = {
+        "bench": "enumeration",
+        "quick": quick,
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "online_budget_ms": summary.get("online_budget_ms"),
+        "within_budget": summary.get("within_budget"),
+        "max_ms": summary.get("max_ms"),
+        "rows": summary.get("rows", []),
+    }
+    path = _BASELINE_QUICK if quick else _BASELINE
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
 
 
 def main() -> None:
@@ -37,6 +68,9 @@ def main() -> None:
         except Exception as e:  # pragma: no cover
             s = {"name": name, "error": repr(e)}
         s["wall_s"] = round(time.perf_counter() - t0, 2)
+        if name == "enumeration" and "error" not in s:
+            _write_enumeration_baseline(s, args.quick)
+            s = {k: v for k, v in s.items() if k != "rows"}
         summaries.append(s)
 
     print("\n==== summary ====")

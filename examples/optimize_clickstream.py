@@ -18,7 +18,8 @@ def main():
     print("implemented flow:")
     print(root.pretty())
 
-    res = optimize(root, Ctx(dop=32), include_commutes=False)
+    res = optimize(root, Ctx(dop=32), include_commutes=False,
+                   prune=False)  # figures need the full cost spectrum
     print(f"\n{res.num_plans} valid reordered plans "
           f"(enumerated in {res.enumeration_s * 1e3:.1f} ms):")
     for rp in res.ranked:

@@ -45,7 +45,7 @@ def main():
             print(f"  {node.name}: R={sorted(p.reads)} W={sorted(p.writes)} "
                   f"card={p.card.value} via {p.source}")
 
-    res = optimize(plan, Ctx(dop=8))
+    res = optimize(plan, Ctx(dop=8), prune=False)  # price all, for the demo
     print("\n== enumerated plans (Map1<->Map2 commute; Map3 conflicts on A,B)")
     for rp in res.ranked:
         print(f"  {rp.cost:.3e}s  {rp.order()}")

@@ -237,3 +237,57 @@ def textmining(scale: int = 1_000_000):
 
 FLOWS = {"q7": q7, "q15": q15, "clickstream": clickstream,
          "textmining": textmining}
+
+
+# ---------------------------------------------------------------------------
+# Synthetic plan-space shapes (logical only — enumeration/costing stress
+# flows for benchmarks and optimizer tests; no bindings)
+# ---------------------------------------------------------------------------
+def map_chain(n_ops: int):
+    """Fully-commuting Map chain: n! reorderings, the enumerator worst case."""
+    sch = Schema.of(**{f"f{i}": np.int64 for i in range(n_ops)})
+    node = F.source("I", sch)
+    for i in range(n_ops):
+        def udf(ir, out, i=i):
+            out.emit(ir.copy().set(f"f{i}", ir.get(f"f{i}") + 1))
+
+        udf.__name__ = f"op{i}"
+        node = F.map_(node, udf, name=f"op{i}")
+    return node
+
+
+def star_join(n_rel: int):
+    """Fact table PK-joined to n_rel - 1 dimensions: the joins commute
+    freely, so the space covers every dimension order (and bushy shapes
+    where key locality admits them)."""
+    n_dims = n_rel - 1
+    fact_fields = {f"k{i}": np.int64 for i in range(n_dims)}
+    fact_fields["meas"] = np.float64
+    node = F.source("fact", Schema.of(**fact_fields),
+                    num_records=10_000_000)
+    for i in range(n_dims):
+        dim = F.source(f"dim{i}", Schema.of(**{f"dk{i}": np.int64,
+                                               f"dv{i}": np.int64}),
+                       num_records=1000 * (i + 1))
+        node = F.match(node, dim, [f"k{i}"], [f"dk{i}"], name=f"J{i}",
+                       hints=Hints(pk_side="right"))
+    return node
+
+
+def chain_join(n_rel: int):
+    """R0 - R1 - ... - R(n-1) chain join: every bushy shape (Catalan(n-1)
+    parenthesizations) is reachable through rotations."""
+    rels = []
+    for i in range(n_rel):
+        fields = {f"a{i}": np.int64}
+        if i > 0:
+            fields[f"b{i}"] = np.int64
+        if i < n_rel - 1:
+            fields[f"c{i}"] = np.int64
+        rels.append(F.source(f"R{i}", Schema.of(**fields),
+                             num_records=10_000 * (i + 1)))
+    node = rels[0]
+    for i in range(1, n_rel):
+        node = F.match(node, rels[i], [f"c{i - 1}"], [f"b{i}"], name=f"J{i}",
+                       hints=Hints(join_fanout=1.0))
+    return node

@@ -14,7 +14,7 @@ import math
 from typing import Optional
 
 from .operators import (CoGroupOp, CrossOp, MapOp, MatchOp, Node, ReduceOp,
-                        Source)
+                        Source, struct_id)
 from .udf import Card, KatEmit
 
 # Selectivity defaults by detected cardinality class
@@ -48,7 +48,7 @@ def estimate(node: Node, memo: Optional[dict] = None) -> Stats:
     """Recursive cardinality/size estimate for `node`'s output."""
     if memo is None:
         memo = {}
-    key = node.canonical()
+    key = struct_id(node)
     if key in memo:
         return memo[key]
 

@@ -15,14 +15,39 @@ Two enumerators are provided:
   non-unary operators" claim, including bushy join orders.
 
 Both return logical plans only; the physical optimizer prices each.
+
+Performance (DESIGN.md §2): trees are hash-consed.  Every node carries an
+interned structural id (`operators.struct_id`), so plan dedup is an integer
+set membership test, and the single-step rewrite list of every distinct
+subtree is computed exactly once per enumeration (`RewriteEngine`).  Rewritten
+trees are interned by id, so a subtree shared by thousands of enumerated
+plans is rewritten and allocated once, not once per enclosing plan.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Iterable, Optional
+from typing import Iterable, Optional
 
-from .operators import MapOp, Node, ReduceOp, Source
-from .reorder import local_rewrites, reorderable
+from .operators import (CrossOp, MapOp, MatchOp, Node, ReduceOp, Source,
+                        commute_id, intern_commute_key, replace_child,
+                        struct_id)
+from .reorder import (commute, pull_unary_from_binary,
+                      push_unary_into_binary, reorderable, rotate,
+                      rotate_guard, swap_unary, unary_reorderable)
+
+
+class PlanSpaceExceeded(RuntimeError):
+    """The rewrite closure grew past `max_plans`.
+
+    Carries the configured limit and the number of distinct plans discovered
+    before bailing out, so callers can report partial progress or retry with
+    a larger budget."""
+
+    def __init__(self, limit: int, count: int):
+        super().__init__(f"plan space exceeds {limit} "
+                         f"({count} plans discovered)")
+        self.limit = limit
+        self.count = count
 
 
 # ---------------------------------------------------------------------------
@@ -61,9 +86,9 @@ def enum_alternatives_alg1(flow: Node,
     seen: set = set()
 
     def add(tree: Node):
-        c = tree.canonical()
-        if c not in seen:
-            seen.add(c)
+        s = struct_id(tree)
+        if s not in seen:
+            seen.add(s)
             alts.append(tree)
 
     for a_minus_r in alts_minus_r:  # line 19
@@ -85,55 +110,238 @@ def enum_alternatives_alg1(flow: Node,
 # ---------------------------------------------------------------------------
 # Closure enumerator (trees with binary operators)
 # ---------------------------------------------------------------------------
-def _rewrites_everywhere(tree: Node) -> Iterable[Node]:
-    """All trees obtained by one valid rewrite at any position in `tree`."""
-    for t in local_rewrites(tree):
-        yield t
-    for i, child in enumerate(tree.children):
-        for sub in _rewrites_everywhere(child):
-            kids = list(tree.children)
-            kids[i] = sub
-            try:
-                yield tree.with_children(*kids)
-            except (ValueError, KeyError):
-                continue
+class RewriteEngine:
+    """Single-step rewrite lists over COMMUTE CLASSES, memoized per class.
+
+    Commutation is unconditionally valid on every binary operator, so the
+    rewrite graph is closed under it: reachability of a plan is equivalent to
+    reachability of its side-order-insensitive class (`commute_id`).  The
+    engine therefore explores one representative per class and never walks
+    the 2^(#binary ops) orientation orbit — rotations, whose applicability
+    does depend on orientation, are *conjugate-completed*: from a class
+    {{X,Y},Z} both regroupings {{X,Z},Y} (plain rotation) and {{Y,Z},X}
+    (rotation of the commuted child) are generated, which covers every
+    rotation any orbit member could perform.  Unary swaps and binary
+    pushes/pulls are orientation-insensitive (both sides are tried).
+
+    `rewrites(node)` returns `(trees, cids)` — one representative per class
+    reachable from `node`'s class by a single non-commute rewrite.  Results
+    are interned per class id and the result id is computed from child ids
+    BEFORE building a tree, so a shape seen earlier in the run costs one
+    dict probe instead of a node construction + schema resolution.  The
+    engine is scoped to one enumeration run: equal ids imply interchangeable
+    subtrees only among trees reachable from a single flow.
+
+    `orbit(tree)` re-materializes the orientation variants of one class
+    (cheap clones, deduplicated by structural id) for callers that need
+    commuted plans as distinct objects (`include_commutes=True`)."""
+
+    def __init__(self):
+        self._memo: dict[int, tuple[list[Node], list[int]]] = {}
+        self._reps: dict[int, Node] = {}
+        self._variants: dict[int, list[Node]] = {}
+
+    def intern(self, node: Node) -> Node:
+        return self._reps.setdefault(commute_id(node), node)
+
+    def _emit(self, trees, cids, tree: Optional[Node]):
+        if tree is not None:
+            c = commute_id(tree)
+            trees.append(self._reps.setdefault(c, tree))
+            cids.append(c)
+
+    def _rotations_into(self, node: Node, side: int, trees: list,
+                        cids: list) -> None:
+        """Both conjugate rotation targets of `node` around its binary child
+        at `side` (see class docstring)."""
+        reps = self._reps
+        child = node.children[side]
+        other_cid = commute_id(node.children[1 - side])
+        g1, g2 = (commute_id(g) for g in child.children)
+        # the plain rotation splits off the child's first grandchild when the
+        # child sits left (p(a(X,Y),Z) -> a(X, p(Y,Z))) and its second when
+        # it sits right (p(X, a(Y,Z)) -> a(p(X,Y), Z)); the conjugate splits
+        # off the other one
+        out_cid, in_cid = (g1, g2) if side == 0 else (g2, g1)
+        rot = intern_commute_key(child.name, (out_cid, intern_commute_key(
+            node.name, (in_cid, other_cid))))
+        rep = reps.get(rot)
+        if rep is not None:
+            if rotate_guard(node, side) and rep.attrs() == node.attrs():
+                trees.append(rep)
+                cids.append(rot)
+        else:
+            self._emit(trees, cids, rotate(node, side))
+        # conjugate: commute the child first, so the other grandchild splits
+        rot2 = intern_commute_key(child.name, (in_cid, intern_commute_key(
+            node.name, (out_cid, other_cid))))
+        if rot2 != rot:
+            rep = reps.get(rot2)
+            if rep is not None:
+                if rotate_guard(node, side, conjugate=True) \
+                        and rep.attrs() == node.attrs():
+                    trees.append(rep)
+                    cids.append(rot2)
+            else:
+                self._emit(trees, cids, rotate(node, side, conjugate=True))
+
+    def _local_into(self, node: Node, trees: list, cids: list) -> None:
+        is_unary = isinstance(node, (MapOp, ReduceOp))
+        if is_unary:
+            child = node.children[0]
+            if isinstance(child, (MapOp, ReduceOp)):
+                if unary_reorderable(node, child):
+                    x_cid = commute_id(child.children[0])
+                    swapped = intern_commute_key(
+                        child.name,
+                        (intern_commute_key(node.name, (x_cid,)),))
+                    rep = self._reps.get(swapped)
+                    if rep is not None:
+                        # same attrs-preservation check as _valid(like=node)
+                        if rep.attrs() == node.attrs():
+                            trees.append(rep)
+                            cids.append(swapped)
+                    else:
+                        self._emit(trees, cids, swap_unary(node, child))
+            elif child.is_binary:
+                for side in (0, 1):
+                    self._emit(trees, cids,
+                               push_unary_into_binary(node, child, side))
+        if node.is_binary:
+            for side in (0, 1):
+                child = node.children[side]
+                if isinstance(child, (MapOp, ReduceOp)):
+                    self._emit(trees, cids,
+                               pull_unary_from_binary(node, side))
+                if isinstance(child, (MatchOp, CrossOp)):
+                    self._rotations_into(node, side, trees, cids)
+
+    def rewrites(self, node: Node) -> tuple[list[Node], list[int]]:
+        cid = commute_id(node)
+        hit = self._memo.get(cid)
+        if hit is not None:
+            return hit
+        reps = self._reps
+        trees: list[Node] = []
+        cids: list[int] = []
+        self._local_into(node, trees, cids)
+        children = node.children
+        if children:
+            child_cids = tuple(commute_id(c) for c in children)
+            for i, child in enumerate(children):
+                sub_trees, sub_cids = self.rewrites(child)
+                for sub, sub_cid in zip(sub_trees, sub_cids):
+                    # id of the substituted tree is known before building it
+                    new_cid = intern_commute_key(
+                        node.name,
+                        child_cids[:i] + (sub_cid,) + child_cids[i + 1:])
+                    rep = reps.get(new_cid)
+                    if rep is None:
+                        rep = replace_child(node, i, sub)
+                        if rep is None:  # schema conflict after substitution
+                            continue
+                        reps[new_cid] = rep
+                    trees.append(rep)
+                    cids.append(new_cid)
+        out = (trees, cids)
+        self._memo[cid] = out
+        return out
+
+    # -- orientation orbit ---------------------------------------------------
+    def _subtree_variants(self, node: Node) -> list[Node]:
+        sid = struct_id(node)
+        hit = self._variants.get(sid)
+        if hit is not None:
+            return hit
+        if not node.children:
+            out = [node]
+        elif node.is_unary:
+            out = []
+            for v in self._subtree_variants(node.children[0]):
+                t = node if v is node.children[0] else replace_child(node, 0, v)
+                if t is not None:
+                    out.append(t)
+        else:
+            seen: set = set()
+            out = []
+            lefts = self._subtree_variants(node.children[0])
+            rights = self._subtree_variants(node.children[1])
+            for lv in lefts:
+                for rv in rights:
+                    if lv is node.children[0] and rv is node.children[1]:
+                        base: Optional[Node] = node
+                    else:
+                        base = replace_child(node, 0, lv)
+                        if base is not None:
+                            base = replace_child(base, 1, rv)
+                    for t in (base, commute(base) if base is not None
+                              else None):
+                        if t is None:
+                            continue
+                        s = struct_id(t)
+                        if s not in seen:
+                            seen.add(s)
+                            out.append(t)
+        self._variants[sid] = out
+        return out
+
+    def orbit(self, tree: Node) -> list[Node]:
+        """All orientation variants of `tree`'s commute class, the class
+        representative first, deduplicated by structural id."""
+        tid = struct_id(tree)
+        return [tree] + [v for v in self._subtree_variants(tree)
+                         if struct_id(v) != tid]
+
+
+def closure(flow: Node, max_plans: int = 20000,
+            engine: Optional[RewriteEngine] = None,
+            include_commutes: bool = True) -> Iterable[Node]:
+    """Lazily yield every flow reachable from `flow` by valid rewrites, in
+    discovery order (depth-first over the class graph, `flow`'s class first;
+    with `include_commutes=True` each class's orientation orbit is emitted
+    when the class is discovered).
+
+    The interleaved optimizer consumes this generator directly so costing
+    overlaps enumeration.  Raises `PlanSpaceExceeded` when more than
+    `max_plans` plans are yielded."""
+    engine = engine or RewriteEngine()
+    root = engine.intern(flow)
+    seen = {commute_id(root)}
+    count = 0
+
+    def emit(rep: Node):
+        nonlocal count
+        members = engine.orbit(rep) if include_commutes else [rep]
+        for m in members:
+            if count >= max_plans:
+                raise PlanSpaceExceeded(max_plans, count)
+            count += 1
+            yield m
+
+    yield from emit(root)
+    work = [root]
+    while work:
+        cur = work.pop()
+        trees, cids = engine.rewrites(cur)
+        for t, c in zip(trees, cids):
+            if c not in seen:
+                seen.add(c)
+                yield from emit(t)
+                work.append(t)
 
 
 def enumerate_plans(flow: Node, max_plans: int = 20000,
-                    include_commutes: bool = True) -> list[Node]:
+                    include_commutes: bool = True,
+                    engine: Optional[RewriteEngine] = None) -> list[Node]:
     """All data flows reachable from `flow` by valid pairwise reorderings.
 
-    `include_commutes=False` collapses Match/Cross argument order: commuted
-    variants are still *traversed* (they unlock rotations) but deduplicated in
-    the returned list by a side-order-insensitive canonical form, matching the
-    paper's notion of distinct operator orders.
+    `include_commutes=False` collapses Match/Cross argument order to one
+    representative per side-order-insensitive class, matching the paper's
+    notion of distinct operator orders.  (The search itself always runs
+    class-wise; commuted variants are materialized only on request.)
     """
-    seen: dict[str, Node] = {flow.canonical(): flow}
-    work = [flow]
-    while work:
-        cur = work.pop()
-        for t in _rewrites_everywhere(cur):
-            c = t.canonical()
-            if c not in seen:
-                if len(seen) >= max_plans:
-                    raise RuntimeError(f"plan space exceeds {max_plans}")
-                seen[c] = t
-                work.append(t)
-
-    plans = list(seen.values())
-    if include_commutes:
-        return plans
-    uniq: dict[str, Node] = {}
-    for p in plans:
-        uniq.setdefault(_commute_canonical(p), p)
-    return list(uniq.values())
-
-
-def _commute_canonical(node: Node) -> str:
-    if not node.children:
-        return node.name
-    parts = sorted(_commute_canonical(c) for c in node.children)
-    return f"{node.name}({','.join(parts)})"
+    return list(closure(flow, max_plans=max_plans, engine=engine,
+                        include_commutes=include_commutes))
 
 
 def count_plans(flow: Node, **kw) -> int:

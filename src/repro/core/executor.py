@@ -38,11 +38,14 @@ def joint_codes(column_groups: list[list[np.ndarray]]) -> tuple[list[np.ndarray]
     the same arity).  Returns per-group code arrays + the domain size.
     """
     arity = len(column_groups[0])
-    lens = [len(g[0]) if g[0] is not None and np.ndim(g[0]) else 0 for g in column_groups]
-    lens = [int(np.shape(g[0])[0]) for g in column_groups]
+    # 0-d (scalar) key columns count as one record — np.shape()[0] would
+    # raise on them, so normalize every column up front
+    column_groups = [[np.atleast_1d(np.asarray(c)) for c in g]
+                     for g in column_groups]
+    lens = [int(g[0].shape[0]) for g in column_groups]
     combined_code: Optional[np.ndarray] = None
     for j in range(arity):
-        stacked = np.concatenate([np.asarray(g[j]) for g in column_groups])
+        stacked = np.concatenate([g[j] for g in column_groups])
         _, inv = np.unique(stacked, return_inverse=True)
         k = int(inv.max()) + 1 if inv.size else 1
         combined_code = inv if combined_code is None else combined_code * k + inv

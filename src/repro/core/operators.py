@@ -20,6 +20,134 @@ from .udf import Card, KatEmit, UdfProperties
 
 _ids = itertools.count()
 
+# ---------------------------------------------------------------------------
+# Hash-consed structural identity (DESIGN.md §2)
+#
+# Every node carries a lazily computed, cached *structural id*: an interned
+# integer assigned per distinct (name, child ids) shape.  Two nodes have the
+# same id iff their `canonical()` strings are equal, so memo tables in the
+# enumerator, the cardinality estimator and the physical optimizer key on an
+# O(1) integer instead of rebuilding an O(tree) string per lookup.  The id is
+# stored directly in the instance `__dict__` (bypassing the frozen-dataclass
+# guard); `dataclasses.replace` and `with_children` build fresh instances, so
+# a cached id can never go stale.
+# ---------------------------------------------------------------------------
+_STRUCT_KEYS: dict = {}
+_COMMUTE_KEYS: dict = {}
+
+
+def intern_struct_key(name: str, child_sids: tuple) -> int:
+    """Interned id for the shape `name(children...)` given child ids.
+
+    Exposed so rewrite engines can compute the id of a candidate tree
+    *before* allocating it (true hash-consing: no allocation for shapes that
+    were already built)."""
+    key = (name, child_sids)
+    sid = _STRUCT_KEYS.get(key)
+    if sid is None:
+        sid = len(_STRUCT_KEYS)
+        _STRUCT_KEYS[key] = sid
+    return sid
+
+
+def struct_id(node: "Node") -> int:
+    """O(1) amortized structural id of `node` (cached on the instance)."""
+    sid = node.__dict__.get("_sid")
+    if sid is None:
+        sid = intern_struct_key(
+            node.name, tuple(struct_id(c) for c in node.children))
+        node.__dict__["_sid"] = sid
+    return sid
+
+
+def intern_commute_key(name: str, child_cids: tuple) -> int:
+    """Interned side-order-insensitive id for `name(children...)` given the
+    children's commute ids (sorted here, so caller order is irrelevant)."""
+    key = (name, tuple(sorted(child_cids)))
+    cid = _COMMUTE_KEYS.get(key)
+    if cid is None:
+        cid = len(_COMMUTE_KEYS)
+        _COMMUTE_KEYS[key] = cid
+    return cid
+
+
+def commute_id(node: "Node") -> int:
+    """Side-order-insensitive structural id (children sorted): two plans that
+    differ only in Match/Cross/CoGroup argument order share one id."""
+    cid = node.__dict__.get("_cid")
+    if cid is None:
+        cid = intern_commute_key(
+            node.name, tuple(commute_id(c) for c in node.children))
+        node.__dict__["_cid"] = cid
+    return cid
+
+
+# caches stored on instances that must not leak into structural clones
+_NODE_CACHE_KEYS = ("_sid", "_cid", "_attrs", "_effr", "_effw", "_pres")
+
+
+def shallow_clone(node: "Node") -> tuple["Node", dict]:
+    """Uninitialized copy of `node` (caches stripped) plus its live field
+    dict, for constructing structural variants without re-running
+    `__post_init__`.  Mutate the returned dict, not the instance — frozen
+    dataclasses block `__setattr__` but share the plain `__dict__`."""
+    new = object.__new__(type(node))
+    d = new.__dict__
+    d.update(node.__dict__)
+    for k in _NODE_CACHE_KEYS:
+        d.pop(k, None)
+    return new, d
+
+
+def replace_child(parent: "Node", idx: int, child: "Node") -> Optional["Node"]:
+    """`parent` with `child` substituted at position `idx`.
+
+    Fast path: when the substitute exposes the same output ATTRIBUTE SET as
+    the node it replaces (every enumerator rewrite is attribute-preserving,
+    and attribute names are globally unique, so schema field order carries no
+    meaning), the parent's resolved schema still applies; we clone the
+    instance dict and skip `__post_init__` re-validation entirely.  Otherwise
+    falls back to the validating `with_children` (returning None on schema
+    conflicts)."""
+    old = parent.children[idx]
+    if old.out_schema is child.out_schema or old.attrs() == child.attrs():
+        new, d = shallow_clone(parent)
+        if "child" in d:
+            d["child"] = child
+        else:
+            d["left" if idx == 0 else "right"] = child
+        return new
+    kids = list(parent.children)
+    kids[idx] = child
+    try:
+        return parent.with_children(*kids)
+    except (ValueError, KeyError):
+        return None
+
+
+def combine_binary(parent: "Node", left: "Node",
+                   right: "Node") -> Optional["Node"]:
+    """`parent` re-rooted over `(left, right)` — the rotation work-horse.
+
+    Fast path for implicit-copy UDFs with no adds/drops (the common join):
+    the output schema is just the concatenation of the input schemas, and the
+    caller (rotation guard) has already established that the operator only
+    references attributes of the new inputs, so validation is skipped.
+    Everything else goes through the validating `with_children`."""
+    p = parent.props
+    if getattr(p, "implicit_copy", False) and not p.adds and not p.drops:
+        ls, rs = left.out_schema, right.out_schema
+        new, d = shallow_clone(parent)
+        d["left"] = left
+        d["right"] = right
+        d["out_schema"] = Schema(ls.fields + rs.fields,
+                                 {**ls.dtypes, **rs.dtypes})
+        return new
+    try:
+        return parent.with_children(left, right)
+    except (ValueError, KeyError):
+        return None
+
 
 @dataclasses.dataclass(frozen=True)
 class Hints:
@@ -61,7 +189,13 @@ class Node:
         raise NotImplementedError
 
     def attrs(self) -> frozenset:
-        return frozenset(self.out_schema.fields)
+        # cached: the reorder guards and property propagation call this on
+        # every node of every candidate rewrite
+        a = self.__dict__.get("_attrs")
+        if a is None:
+            a = frozenset(self.out_schema.fields)
+            self.__dict__["_attrs"] = a
+        return a
 
     # -- pretty printing -----------------------------------------------------
     def pretty(self, indent: int = 0) -> str:

@@ -2,24 +2,38 @@
 
     optimize(flow) =
         SCA properties (already attached at flow construction)
-        -> enumerate all valid reordered flows     (Algorithm 1 / closure)
-        -> physical optimization per flow          (Volcano DP, shared memo)
-        -> rank by estimated cost, return the best
+        -> interleaved search: each flow discovered by the rewrite closure is
+           priced IMMEDIATELY through the shared Volcano memo, and flows whose
+           admissible lower bound (`physical.cost_lower_bound`) already
+           exceeds the best cost seen so far are skipped (branch-and-bound)
+        -> rank priced flows by estimated cost, return the best
 
-The physical DP memoizes on logical-subtree identity, so the (often heavily
-overlapping) enumerated flows are priced with shared work — the integration
-of enumeration and costing sketched in the paper's Sec. 6.
+Enumeration and costing share hash-consed subtrees (`operators.struct_id`),
+so the (often heavily overlapping) enumerated flows are priced with shared
+work — the integration of enumeration and costing sketched in the paper's
+Sec. 6, plus the Cascades-style bound pruning from the Volcano line of work.
+
+Pruning only skips flows that provably cannot beat the incumbent, so `best`
+is identical (same flow order, same cost) to exhaustively pricing every
+enumerated flow — `optimize_two_phase` keeps the original enumerate-then-cost
+pipeline precisely so tests and benchmarks can verify that equivalence.
+Benchmarks that need the full cost spectrum (the paper's Figs. 5-7 rank
+plots) pass `prune=False`.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Optional
 
-from .enumeration import enumerate_plans
-from .operators import Node
-from .physical import Ctx, PhysPlan, best_physical
+from .cost import estimate
+from .enumeration import RewriteEngine, _mtab_key, closure, enumerate_plans
+from .operators import MapOp, Node, ReduceOp, Source, commute_id
+from .physical import (Ctx, PhysPlan, _expand, _prune, best_physical,
+                       cost_lower_bound)
+from .reorder import reorderable
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,13 +49,18 @@ class RankedPlan:
 @dataclasses.dataclass(frozen=True)
 class OptResult:
     best: RankedPlan
-    ranked: tuple            # all plans, ascending cost
+    ranked: tuple            # all PRICED plans, ascending cost
     enumeration_s: float
     costing_s: float
+    num_enumerated: int = 0  # flows discovered by the closure
+    num_pruned: int = 0      # flows skipped by the lower-bound test
 
     @property
     def num_plans(self) -> int:
-        return len(self.ranked)
+        """Size of the explored plan space.  With branch-and-bound pruning
+        `ranked` holds only the flows that were actually priced; the space
+        the search covered is `num_enumerated`."""
+        return self.num_enumerated or len(self.ranked)
 
     def pick_rank_intervals(self, k: int = 10) -> list[RankedPlan]:
         """K plans at regular rank intervals (the paper's Figs. 5-7 method)."""
@@ -52,9 +71,12 @@ class OptResult:
         return [self.ranked[i] for i in idx]
 
     def summary(self) -> str:
-        lines = [f"{self.num_plans} plans enumerated in "
-                 f"{self.enumeration_s * 1e3:.1f} ms, costed in "
-                 f"{self.costing_s * 1e3:.1f} ms"]
+        lines = [f"{len(self.ranked)} plans priced "
+                 f"({self.num_enumerated} enumerated, "
+                 f"{self.num_pruned} pruned by bound) in "
+                 f"{(self.enumeration_s + self.costing_s) * 1e3:.1f} ms "
+                 f"(enum {self.enumeration_s * 1e3:.1f} / "
+                 f"cost {self.costing_s * 1e3:.1f})"]
         best, worst = self.ranked[0], self.ranked[-1]
         lines.append(f"best : {best.cost:.3e}s  {best.order()}")
         lines.append(f"worst: {worst.cost:.3e}s  {worst.order()}  "
@@ -62,8 +84,221 @@ class OptResult:
         return "\n".join(lines)
 
 
+# ---------------------------------------------------------------------------
+# Group-level memoized search for unary flows (DESIGN.md §4.2)
+#
+# On purely unary flows the rewrite closure equals the paper's Algorithm-1
+# space (tested), and Algorithm 1's memo insight — all orders of the same
+# operator multiset over the same source share one alternative set — lets the
+# search run over GROUPS (operator subsets, O(2^n) of them) instead of
+# materialized orderings (O(n!)).  Costing is interleaved per group: each
+# group keeps, per (output-stats, physical-props) key, the cheapest physical
+# sub-plan over any reachable ordering.  Keying by output stats keeps the
+# search exact under the order-SENSITIVE cardinality estimator: two orderings
+# only share a memo slot when every enclosing operator would be priced
+# identically on top of them.
+# ---------------------------------------------------------------------------
+def _is_unary_flow(flow: Node) -> bool:
+    n = flow
+    while not isinstance(n, Source):
+        if not isinstance(n, (MapOp, ReduceOp)):
+            return False
+        n = n.children[0]
+    return True
+
+
+class _UnaryGroupSearch:
+    """Interleaved Algorithm-1 exploration + Volcano costing over op groups."""
+
+    def __init__(self, ctx: Ctx, stats_memo: dict):
+        self.ctx = ctx
+        self.stats_memo = stats_memo
+        self._roots: dict = {}
+        self._cands: dict = {}
+        self._counts: dict = {}
+
+    # -- logical exploration (Algorithm 1's candidate-root recursion) -------
+    def roots(self, flow: Node) -> list:
+        """[(root operator instance, representative flow of group-minus-root)]
+        — every operator that can top some reachable ordering of flow's
+        group.  Mirrors Algorithm 1 lines 19-27: the original root always
+        qualifies; a root s of the sub-group additionally qualifies when
+        `reorderable(r, s)` (the checks only read group-invariant inputs:
+        UDF properties, keys, and the sub-group's attribute set)."""
+        key = _mtab_key(flow)
+        hit = self._roots.get(key)
+        if hit is not None:
+            return hit
+        out: list = []
+        if not isinstance(flow, Source):
+            r = flow
+            sub = flow.children[0]
+            out.append((r, sub))
+            names = {r.name}
+            for s, s_sub in self.roots(sub):
+                if s.name in names or not reorderable(r, s):
+                    continue
+                try:
+                    alt_sub = r.with_children(s_sub)  # Alg. 1 line 24
+                except (ValueError, KeyError):
+                    continue
+                names.add(s.name)
+                out.append((s, alt_sub))
+        self._roots[key] = out
+        return out
+
+    def count(self, flow: Node) -> int:
+        """Number of distinct reachable orderings (== len(enumerate_plans))."""
+        key = _mtab_key(flow)
+        hit = self._counts.get(key)
+        if hit is None:
+            if isinstance(flow, Source):
+                hit = 1
+            else:
+                hit = sum(self.count(sub) for _, sub in self.roots(flow))
+            self._counts[key] = hit
+        return hit
+
+    # -- interleaved costing ------------------------------------------------
+    def _stats_key(self, node: Node) -> tuple:
+        st = estimate(node, self.stats_memo)
+        return (st.rows, st.width, st.distinct)
+
+    def cands(self, flow: Node) -> dict:
+        """{stats_key: {Props: (PhysPlan, flow_tree)}} — cheapest physical
+        sub-plan per (output stats, properties) over every reachable ordering
+        of flow's group.  Dropping a costlier same-key entry is exact: any
+        enclosing operator's cost depends on the sub-plan only through its
+        stats, properties and cost."""
+        key = _mtab_key(flow)
+        hit = self._cands.get(key)
+        if hit is not None:
+            return hit
+        out: dict = {}
+        if isinstance(flow, Source):
+            plans = _prune(_expand(flow, self.ctx, self.stats_memo, []))
+            out[self._stats_key(flow)] = {
+                p: (plan, flow) for p, plan in plans.items()}
+        else:
+            for s, s_sub in self.roots(flow):
+                for pmap in self.cands(s_sub).values():
+                    for iprops, (iplan, itree) in pmap.items():
+                        try:
+                            n = s.with_children(itree)
+                        except (ValueError, KeyError):
+                            continue
+                        bucket = out.setdefault(self._stats_key(n), {})
+                        for p in _expand(n, self.ctx, self.stats_memo,
+                                         [{iprops: iplan}]):
+                            cur = bucket.get(p.props)
+                            if cur is None or p.total_cost.total \
+                                    < cur[0].total_cost.total:
+                                bucket[p.props] = (p, n)
+        self._cands[key] = out
+        return out
+
+    def ranked(self, flow: Node) -> list[RankedPlan]:
+        """Root-group entries as RankedPlans (cost-ascending, stable)."""
+        out = []
+        for pmap in self.cands(flow).values():
+            for plan, tree in pmap.values():
+                out.append(RankedPlan(flow=tree, plan=plan,
+                                      cost=plan.total_cost.total))
+        out.sort(key=lambda r: r.cost)
+        return out
+
+
+# number of orderings above which a unary flow is searched group-wise rather
+# than through the materializing closure (which must touch every ordering)
+GROUP_SEARCH_THRESHOLD = 2000
+# fully-commuting flows make the group lattice itself exponential (2^n);
+# past this many operators fall back to the closure + its max_plans guard
+GROUP_SEARCH_MAX_OPS = 16
+
+
 def optimize(flow: Node, ctx: Optional[Ctx] = None, max_plans: int = 20000,
-             include_commutes: bool = True) -> OptResult:
+             include_commutes: bool = True, prune: bool = True) -> OptResult:
+    """Interleaved enumeration + costing with branch-and-bound.
+
+    `prune=False` prices every enumerated flow (full ranked spectrum, as the
+    paper's rank-interval figures need); the best plan is the same either
+    way.  `include_commutes=False` prices one representative per
+    side-order-insensitive plan class, exactly as the two-phase pipeline
+    deduplicated before pricing.
+
+    Purely unary flows whose reachable space exceeds GROUP_SEARCH_THRESHOLD
+    orderings are searched group-wise (`_UnaryGroupSearch`): the memoized
+    lattice of operator subsets is priced instead of each ordering, so e.g.
+    a fully-commuting 9-map chain (9! = 362880 orderings) costs ~2^9 group
+    expansions.  `max_plans` caps MATERIALIZED plans (the closure paths and
+    `enumerate_plans` raise `PlanSpaceExceeded` past it); the group search
+    never materializes orderings, so the cap does not apply there."""
+    ctx = ctx or Ctx()
+    if prune and _is_unary_flow(flow):
+        n_ops = sum(1 for _ in flow.iter_nodes()) - 1
+        # n_ops! bounds the ordering count, so small flows skip the lattice
+        # construction that exact counting requires
+        if n_ops <= GROUP_SEARCH_MAX_OPS \
+                and math.factorial(n_ops) > GROUP_SEARCH_THRESHOLD:
+            t0 = time.perf_counter()
+            search = _UnaryGroupSearch(ctx, {})
+            total = search.count(flow)
+            if total > GROUP_SEARCH_THRESHOLD:
+                t1 = time.perf_counter()
+                ranked = search.ranked(flow)
+                t2 = time.perf_counter()
+                return OptResult(best=ranked[0], ranked=tuple(ranked),
+                                 enumeration_s=t1 - t0, costing_s=t2 - t1,
+                                 num_enumerated=total,
+                                 num_pruned=total - len(ranked))
+    engine = RewriteEngine()
+    memo: dict = {}
+    stats_memo: dict = {}
+    bound_memo: dict = {}
+    ranked: list[RankedPlan] = []
+    upper = float("inf")
+    num_enumerated = 0
+    num_pruned = 0
+    costing_s = 0.0
+
+    t0 = time.perf_counter()
+    for f in closure(flow, max_plans=max_plans, engine=engine,
+                     include_commutes=include_commutes):
+        num_enumerated += 1
+        tc = time.perf_counter()
+        if prune and ranked:
+            lb = cost_lower_bound(f, ctx, stats_memo, bound_memo)
+            # conservative margin: the bound and the plan cost sum the same
+            # terms in different association orders, so a mathematically
+            # equal pair can differ by 1 ULP either way — requiring the
+            # bound to strictly clear the incumbent keeps a tied-or-better
+            # plan from ever being pruned (the same-best-plan contract)
+            if lb >= upper * (1.0 + 1e-12):
+                num_pruned += 1
+                costing_s += time.perf_counter() - tc
+                continue
+        plan = best_physical(f, ctx, memo, stats_memo)
+        cost = plan.total_cost.total
+        ranked.append(RankedPlan(flow=f, plan=plan, cost=cost))
+        if cost < upper:
+            upper = cost
+        costing_s += time.perf_counter() - tc
+    total_s = time.perf_counter() - t0
+
+    ranked.sort(key=lambda r: r.cost)  # stable: discovery order breaks ties
+    return OptResult(best=ranked[0], ranked=tuple(ranked),
+                     enumeration_s=total_s - costing_s, costing_s=costing_s,
+                     num_enumerated=num_enumerated, num_pruned=num_pruned)
+
+
+def optimize_two_phase(flow: Node, ctx: Optional[Ctx] = None,
+                       max_plans: int = 20000,
+                       include_commutes: bool = True) -> OptResult:
+    """The original enumerate-everything-then-cost-everything pipeline.
+
+    Kept as the reference implementation: `optimize` must return the same
+    best plan (same flow order, same total cost) on every flow — see
+    tests/test_optimizer.py and bench_enumeration's speedup column."""
     ctx = ctx or Ctx()
     t0 = time.perf_counter()
     flows = enumerate_plans(flow, max_plans=max_plans,
@@ -79,4 +314,5 @@ def optimize(flow: Node, ctx: Optional[Ctx] = None, max_plans: int = 20000,
     t2 = time.perf_counter()
     ranked.sort(key=lambda r: r.cost)
     return OptResult(best=ranked[0], ranked=tuple(ranked),
-                     enumeration_s=t1 - t0, costing_s=t2 - t1)
+                     enumeration_s=t1 - t0, costing_s=t2 - t1,
+                     num_enumerated=len(flows), num_pruned=0)

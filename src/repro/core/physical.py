@@ -36,7 +36,7 @@ from typing import Optional
 from .. import hw
 from .cost import Stats, estimate, sort_flops
 from .operators import (CoGroupOp, CrossOp, MapOp, MatchOp, Node, ReduceOp,
-                        Source)
+                        Source, struct_id)
 from .reorder import eff_writes
 
 UDF_VECTOR_FLOPS = 4e12  # VPU-class throughput for record-wise UDF work
@@ -106,9 +106,15 @@ class PhysPlan:
 
     @property
     def total_cost(self) -> CostVec:
-        c = self.node_cost
-        for i in self.inputs:
-            c = c + i.total_cost
+        # cached: plans are immutable and the pruning sweep + branch-and-bound
+        # query this O(plans) times, so the naive O(tree) recursion per call
+        # dominated optimizer time
+        c = self.__dict__.get("_tc")
+        if c is None:
+            c = self.node_cost
+            for i in self.inputs:
+                c = c + i.total_cost
+            self.__dict__["_tc"] = c
         return c
 
     def pretty(self, indent: int = 0) -> str:
@@ -146,36 +152,65 @@ def _t_cpu(flops: float, ctx: Ctx) -> float:
 
 def _preserved(props: Props, node: Node) -> Props:
     """Input properties that survive a record-wise operator (writes destroy)."""
+    cache = node.__dict__.setdefault("_pres", {})
+    hit = cache.get(props)
+    if hit is not None:
+        return hit
     w = eff_writes(node)
-    parts = frozenset(g for g in props.partitions if not (g & w))
+    attrs = node.attrs()
+    parts = frozenset(g for g in props.partitions
+                      if not (g & w) and g <= attrs)
     sort = []
     for a in props.sort:
-        if a in w or a not in node.attrs():
+        if a in w or a not in attrs:
             break
         sort.append(a)
-    parts = frozenset(g for g in parts if g <= node.attrs())
-    return Props(partitions=parts, sort=tuple(sort))
+    out = Props(partitions=parts, sort=tuple(sort))
+    cache[props] = out
+    return out
 
 
 # ---------------------------------------------------------------------------
 # Candidate generation per operator
 # ---------------------------------------------------------------------------
 def _prune(cands: list[PhysPlan]) -> dict[Props, PhysPlan]:
+    """Pareto set {props -> cheapest plan}, minus dominated entries.
+
+    Sorted dominance sweep (DESIGN.md §3.3): after deduping per property
+    vector, entries are processed in ascending cost order, so an entry can
+    only be dominated by one already kept — dominance (`Props.dominates`) is
+    transitive, so checking against kept entries alone is exhaustive.  This
+    replaces the previous O(n²) all-pairs scan; n is small per operator but
+    the scan ran once per memo group, on every group of every enumerated
+    flow.  Entries with exactly equal cost are swept as one batch since the
+    cheaper-or-EQUAL rule lets them eliminate each other."""
     by_prop: dict[Props, PhysPlan] = {}
     for c in cands:
         cur = by_prop.get(c.props)
         if cur is None or c.total_cost.total < cur.total_cost.total:
             by_prop[c.props] = c
-    # drop entries dominated by a cheaper-or-equal entry with better props
+    if len(by_prop) <= 1:
+        return by_prop
+
+    items = sorted(by_prop.items(), key=lambda kv: kv[1].total_cost.total)
     out: dict[Props, PhysPlan] = {}
-    items = list(by_prop.items())
-    for p, plan in items:
-        dominated = any(
-            q.dominates(p) and other.total_cost.total <= plan.total_cost.total
-            and q != p
-            for q, other in items)
-        if not dominated:
+    i, n = 0, len(items)
+    while i < n:
+        # batch of equal-cost entries (ties may dominate each other; mutual
+        # dominance is impossible after the per-props dedup above)
+        j = i + 1
+        cost_i = items[i][1].total_cost.total
+        while j < n and items[j][1].total_cost.total == cost_i:
+            j += 1
+        batch = items[i:j]
+        for p, plan in batch:
+            if any(q.dominates(p) for q in out):
+                continue
+            if len(batch) > 1 and any(
+                    q.dominates(p) for q, _ in batch if q != p):
+                continue
             out[p] = plan
+        i = j
     return out
 
 
@@ -185,10 +220,25 @@ def candidates(node: Node, ctx: Ctx, memo: Optional[dict] = None,
         memo = {}
     if stats_memo is None:
         stats_memo = {}
-    key = node.canonical()
-    if key in memo:
-        return memo[key]
+    key = struct_id(node)
+    hit = memo.get(key)
+    if hit is not None:
+        return hit
+    child_cands = [candidates(c, ctx, memo, stats_memo)
+                   for c in node.children]
+    pruned = _prune(_expand(node, ctx, stats_memo, child_cands))
+    memo[key] = pruned
+    return pruned
 
+
+def _expand(node: Node, ctx: Ctx, stats_memo: dict,
+            child_cands: list) -> list[PhysPlan]:
+    """Physical alternatives for `node` given its children's candidate maps
+    ({Props -> PhysPlan}, one per child), unpruned.
+
+    Split out of `candidates` so group-level searches (the interleaved
+    optimizer's unary fast path) can price an operator over an explicit
+    sub-plan set instead of the per-subtree memo."""
     st = estimate(node, stats_memo)
     out: list[PhysPlan] = []
 
@@ -201,7 +251,7 @@ def candidates(node: Node, ctx: Ctx, memo: Optional[dict] = None,
 
     elif isinstance(node, MapOp):
         cin = estimate(node.child, stats_memo)
-        for iprops, iplan in candidates(node.child, ctx, memo, stats_memo).items():
+        for iprops, iplan in child_cands[0].items():
             cost = CostVec(
                 mem=_t_mem(cin.bytes, st.bytes, ctx),
                 cpu=_t_cpu(cin.rows * node.hints.cpu_flops_per_record, ctx))
@@ -212,7 +262,7 @@ def candidates(node: Node, ctx: Ctx, memo: Optional[dict] = None,
     elif isinstance(node, ReduceOp):
         cin = estimate(node.child, stats_memo)
         kset = frozenset(node.key)
-        for iprops, iplan in candidates(node.child, ctx, memo, stats_memo).items():
+        for iprops, iplan in child_cands[0].items():
             options = []
             if iprops.partitioned_on(kset):
                 options.append(("forward", 0.0, iprops.partitions))
@@ -237,17 +287,16 @@ def candidates(node: Node, ctx: Ctx, memo: Optional[dict] = None,
     elif isinstance(node, (MatchOp, CrossOp)):
         ls = estimate(node.left, stats_memo)
         rs = estimate(node.right, stats_memo)
-        lcands = candidates(node.left, ctx, memo, stats_memo)
-        rcands = candidates(node.right, ctx, memo, stats_memo)
+        lcands, rcands = child_cands
         is_match = isinstance(node, MatchOp)
         lk = frozenset(node.left_key) if is_match else frozenset()
         rk = frozenset(node.right_key) if is_match else frozenset()
         pair_cpu = st.rows * node.hints.cpu_flops_per_record
 
-        for (lp, lplan), (rp, rplan) in itertools.product(
-                lcands.items(), rcands.items()):
-            if is_match:
-                # (A) repartition/forward both sides, sort-merge locally
+        if is_match:
+            # (A) repartition/forward both sides, sort-merge locally
+            for (lp, lplan), (rp, rplan) in itertools.product(
+                    lcands.items(), rcands.items()):
                 lship = "forward" if lp.partitioned_on(lk) else "partition"
                 rship = "forward" if rp.partitioned_on(rk) else "partition"
                 net = (0.0 if lship == "forward" else _t_shuffle(ls.bytes, ctx)) \
@@ -274,28 +323,35 @@ def candidates(node: Node, ctx: Ctx, memo: Optional[dict] = None,
                 out.append(PhysPlan(node=node, inputs=(lplan, rplan),
                                     ship=(lship, rship), local=local,
                                     props=props, node_cost=cost))
-            # (B)/(C) broadcast one side, probe in the other side's order —
-            # preserves the forwarded side's partitioning & sort (the Q15
-            # physical flip in the paper's Sec. 7.3).
-            for bc_side in (0, 1):
-                bst, fst = (rs, ls) if bc_side == 1 else (ls, rs)
-                fprops = lp if bc_side == 1 else rp
-                net = _t_broadcast(bst.bytes, ctx)
-                probe_rows = fst.rows / ctx.dop
-                cpu = pair_cpu + sort_flops(bst.rows) * ctx.dop
-                if is_match:
-                    cpu += probe_rows * max(1.0, math.log2(max(bst.rows, 2.0))) \
-                        * ctx.dop
-                cost = CostVec(net=net,
-                               mem=_t_mem(ls.bytes + rs.bytes * ctx.dop
-                                          if bc_side == 1 else
-                                          rs.bytes + ls.bytes * ctx.dop,
-                                          st.bytes, ctx),
-                               cpu=_t_cpu(cpu, ctx))
-                ship = ("forward", "broadcast") if bc_side == 1 \
-                    else ("broadcast", "forward")
+        # (B)/(C) broadcast one side, probe in the other side's order —
+        # preserves the forwarded side's partitioning & sort (the Q15
+        # physical flip in the paper's Sec. 7.3).  A broadcast destroys the
+        # replicated side's properties, so only its CHEAPEST sub-plan can
+        # survive pruning — pairing every forwarded candidate with it yields
+        # the same Pareto set as the full product, minus dominated clones.
+        cheap_l = min(lcands.values(), key=lambda p: p.total_cost.total)
+        cheap_r = min(rcands.values(), key=lambda p: p.total_cost.total)
+        for bc_side in (0, 1):
+            bst, fst = (rs, ls) if bc_side == 1 else (ls, rs)
+            net = _t_broadcast(bst.bytes, ctx)
+            probe_rows = fst.rows / ctx.dop
+            cpu = pair_cpu + sort_flops(bst.rows) * ctx.dop
+            if is_match:
+                cpu += probe_rows * max(1.0, math.log2(max(bst.rows, 2.0))) \
+                    * ctx.dop
+            cost = CostVec(net=net,
+                           mem=_t_mem(ls.bytes + rs.bytes * ctx.dop
+                                      if bc_side == 1 else
+                                      rs.bytes + ls.bytes * ctx.dop,
+                                      st.bytes, ctx),
+                           cpu=_t_cpu(cpu, ctx))
+            ship = ("forward", "broadcast") if bc_side == 1 \
+                else ("broadcast", "forward")
+            fwd_cands = lcands if bc_side == 1 else rcands
+            for fprops, fplan in fwd_cands.items():
+                inputs = (fplan, cheap_r) if bc_side == 1 else (cheap_l, fplan)
                 out.append(PhysPlan(
-                    node=node, inputs=(lplan, rplan), ship=ship, local="probe",
+                    node=node, inputs=inputs, ship=ship, local="probe",
                     props=_preserved(fprops, node), node_cost=cost))
 
     elif isinstance(node, CoGroupOp):
@@ -303,8 +359,7 @@ def candidates(node: Node, ctx: Ctx, memo: Optional[dict] = None,
         rs = estimate(node.right, stats_memo)
         lk, rk = frozenset(node.left_key), frozenset(node.right_key)
         for (lp, lplan), (rp, rplan) in itertools.product(
-                candidates(node.left, ctx, memo, stats_memo).items(),
-                candidates(node.right, ctx, memo, stats_memo).items()):
+                child_cands[0].items(), child_cands[1].items()):
             lship = "forward" if lp.partitioned_on(lk) else "partition"
             rship = "forward" if rp.partitioned_on(rk) else "partition"
             net = (0.0 if lship == "forward" else _t_shuffle(ls.bytes, ctx)) \
@@ -322,9 +377,7 @@ def candidates(node: Node, ctx: Ctx, memo: Optional[dict] = None,
     else:
         raise TypeError(type(node).__name__)
 
-    pruned = _prune(out)
-    memo[key] = pruned
-    return pruned
+    return out
 
 
 def best_physical(flow: Node, ctx: Optional[Ctx] = None,
@@ -334,3 +387,91 @@ def best_physical(flow: Node, ctx: Optional[Ctx] = None,
     ctx = ctx or Ctx()
     cands = candidates(flow, ctx, memo, stats_memo)
     return min(cands.values(), key=lambda p: p.total_cost.total)
+
+
+# ---------------------------------------------------------------------------
+# Admissible lower bound for branch-and-bound (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+def _can_partition(node: Node, memo: dict) -> bool:
+    """Could ANY physical plan of `node` deliver a partitioned stream?
+    Partitioning is produced by partitioned Sources and by the repartition
+    variants of KAT / Match operators, and at best survives everything else.
+    False means every physical plan of every consumer that needs co-located
+    keys must pay a repartition of this subtree's output."""
+    key = struct_id(node)
+    hit = memo.get(key)
+    if hit is None:
+        if isinstance(node, Source):
+            hit = node.partitioned_on is not None
+        elif isinstance(node, (ReduceOp, MatchOp, CoGroupOp)):
+            hit = True
+        else:
+            hit = any(_can_partition(c, memo) for c in node.children)
+        memo[key] = hit
+    return hit
+
+
+def cost_lower_bound(node: Node, ctx: Ctx, stats_memo: dict,
+                     bound_memo: dict) -> float:
+    """Admissible lower bound on `best_physical(node).total_cost.total`.
+
+    Sums, per operator, only cost terms that EVERY physical alternative pays:
+    the HBM traffic of reading inputs and writing output, the UDF flops, and
+    — when no subtree below can possibly produce a partitioning — the
+    cheapest unavoidable network step for key-based operators.  Sort and
+    probe work, and any shuffle that interesting properties might elide, are
+    excluded, so bound <= true cost and branch-and-bound pruning on it never
+    discards the optimum.  Memoized per structural id: across enumerated
+    flows, shared subtrees are bounded once."""
+    key = struct_id(node)
+    hit = bound_memo.get(key)
+    if hit is not None:
+        return hit
+
+    st = estimate(node, stats_memo)
+    if isinstance(node, Source):
+        lb = _t_mem(st.bytes, 0, ctx)
+    elif isinstance(node, MapOp):
+        cin = estimate(node.child, stats_memo)
+        lb = cost_lower_bound(node.child, ctx, stats_memo, bound_memo) \
+            + _t_mem(cin.bytes, st.bytes, ctx) \
+            + _t_cpu(cin.rows * node.hints.cpu_flops_per_record, ctx)
+    elif isinstance(node, ReduceOp):
+        cin = estimate(node.child, stats_memo)
+        net = 0.0 if _can_partition(node.child, bound_memo.setdefault(
+            "_parts", {})) else _t_shuffle(cin.bytes, ctx)
+        lb = cost_lower_bound(node.child, ctx, stats_memo, bound_memo) \
+            + net + _t_mem(cin.bytes, st.bytes, ctx) \
+            + _t_cpu(cin.rows * node.hints.cpu_flops_per_record, ctx)
+    elif isinstance(node, (MatchOp, CrossOp, CoGroupOp)):
+        ls = estimate(node.children[0], stats_memo)
+        rs = estimate(node.children[1], stats_memo)
+        parts = bound_memo.setdefault("_parts", {})
+        net = 0.0
+        if isinstance(node, CrossOp):
+            # Cross has broadcast-only strategies: one side always replicates
+            net = _t_broadcast(min(ls.bytes, rs.bytes), ctx)
+        else:
+            # every sort-merge strategy must repartition each side that
+            # cannot possibly arrive co-located; Match may instead broadcast
+            # one side (CoGroup may not, but min() stays admissible)
+            shuffle_net = \
+                (0.0 if _can_partition(node.children[0], parts)
+                 else _t_shuffle(ls.bytes, ctx)) \
+                + (0.0 if _can_partition(node.children[1], parts)
+                   else _t_shuffle(rs.bytes, ctx))
+            net = min(shuffle_net,
+                      _t_broadcast(min(ls.bytes, rs.bytes), ctx))
+        if isinstance(node, CoGroupOp):
+            cpu = (ls.rows + rs.rows) * node.hints.cpu_flops_per_record
+        else:
+            cpu = st.rows * node.hints.cpu_flops_per_record
+        lb = cost_lower_bound(node.children[0], ctx, stats_memo, bound_memo) \
+            + cost_lower_bound(node.children[1], ctx, stats_memo, bound_memo) \
+            + net + _t_mem(ls.bytes + rs.bytes, st.bytes, ctx) \
+            + _t_cpu(cpu, ctx)
+    else:
+        raise TypeError(type(node).__name__)
+
+    bound_memo[key] = lb
+    return lb

@@ -35,7 +35,8 @@ import dataclasses
 from typing import Optional
 
 from .operators import (CoGroupOp, CrossOp, MapOp, MatchOp, Node, ReduceOp,
-                        Source, rebuild)
+                        Source, combine_binary, rebuild, replace_child,
+                        shallow_clone)
 from .udf import Card, KatEmit, UdfProperties
 
 
@@ -58,12 +59,20 @@ def input_attrs(node: Node) -> frozenset:
 
 
 def eff_reads(node: Node) -> frozenset:
-    return node.props.reads | node_keys(node)
+    r = node.__dict__.get("_effr")
+    if r is None:
+        r = node.props.reads | node_keys(node)
+        node.__dict__["_effr"] = r
+    return r
 
 
 def eff_writes(node: Node) -> frozenset:
-    inp, out = input_attrs(node), node.attrs()
-    return node.props.writes | (inp - out) | (out - inp)
+    w = node.__dict__.get("_effw")
+    if w is None:
+        inp, out = input_attrs(node), node.attrs()
+        w = node.props.writes | (inp - out) | (out - inp)
+        node.__dict__["_effw"] = w
+    return w
 
 
 def roc(a: Node, b: Node) -> bool:
@@ -101,19 +110,22 @@ def _is_binary_op(n: Node) -> bool:
 
 
 def _valid(tree: Optional[Node], like: Optional[Node] = None) -> Optional[Node]:
-    """Re-run schema propagation; additionally require the rewritten subtree
-    to expose the SAME attribute set as the original (`like`) — a projecting
-    operator moved across a binary op would otherwise silently change the
-    plan's output schema (e.g. a keys()-Reduce pulled above a join)."""
+    """Require the rewritten subtree to expose the SAME attribute set as the
+    original (`like`) — a projecting operator moved across a binary op would
+    otherwise silently change the plan's output schema (e.g. a keys()-Reduce
+    pulled above a join).
+
+    Schema propagation itself needs no re-run here: every rewrite assembles
+    its result exclusively through `with_children` / `dataclasses.replace`,
+    and each node construction already re-resolves and validates that node's
+    schema against its (new) children — so all *changed* levels are checked
+    at build time, and unchanged subtrees were valid by induction.  Rewrites
+    wrap construction in try/except and hand None to `_valid` on conflict."""
     if tree is None:
         return None
-    try:
-        rebuilt = rebuild(tree)
-    except (ValueError, KeyError):
+    if like is not None and tree.attrs() != like.attrs():
         return None
-    if like is not None and rebuilt.attrs() != like.attrs():
-        return None
-    return rebuilt
+    return tree
 
 
 # ---------------------------------------------------------------------------
@@ -149,7 +161,15 @@ def swap_unary(r: Node, s: Node) -> Optional[Node]:
     if not unary_reorderable(r, s):
         return None
     x = s.children[0]
-    return _valid(s.with_children(r.with_children(x)), like=r)
+    # replace_child skips schema re-resolution when the substituted child
+    # exposes identical fields (the common case for write-only neighbours)
+    inner = replace_child(r, 0, x)
+    if inner is None:
+        return None
+    t = replace_child(s, 0, inner)
+    if t is None:
+        return None
+    return _valid(t, like=r)
 
 
 # ---------------------------------------------------------------------------
@@ -261,8 +281,11 @@ def push_unary_into_binary(u: Node, b: Node, side: int) -> Optional[Node]:
     if not _push_conditions(u, b, side):
         return None
     kids = list(b.children)
-    kids[side] = u.with_children(kids[side])
-    return _valid(b.with_children(*kids), like=original)
+    try:
+        kids[side] = u.with_children(kids[side])
+        return _valid(b.with_children(*kids), like=original)
+    except (ValueError, KeyError):
+        return None
 
 
 def pull_unary_from_binary(b: Node, side: int) -> Optional[Node]:
@@ -290,7 +313,10 @@ def pull_unary_from_binary(b: Node, side: int) -> Optional[Node]:
         if extra and u.props.kat_emit is not None \
                 and u.props.kat_emit.name.startswith("PER_GROUP"):
             u = _extend_reduce(u, extra)
-    return _valid(u.with_children(new_b), like=b)
+    try:
+        return _valid(u.with_children(new_b), like=b)
+    except (ValueError, KeyError):
+        return None
 
 
 # ---------------------------------------------------------------------------
@@ -309,24 +335,59 @@ def commute(b: Node) -> Optional[Node]:
     """Swap the two inputs of a Match/Cross/CoGroup (schema is name-based)."""
     if not _is_binary_op(b):
         return None
-    if isinstance(b, CrossOp):
-        new = dataclasses.replace(b, left=b.right, right=b.left,
-                                  udf=_swap_args_udf(b.udf), out_schema=None)
-    else:
-        hints = b.hints
-        if hints.pk_side in ("left", "right"):
-            hints = dataclasses.replace(
-                hints, pk_side="right" if hints.pk_side == "left" else "left")
-        new = dataclasses.replace(
-            b, left=b.right, right=b.left, left_key=b.right_key,
-            right_key=b.left_key, udf=_swap_args_udf(b.udf), hints=hints,
-            out_schema=None)
+    # manual clone: argument order is schema-irrelevant (name-based attrs),
+    # so the resolved out_schema carries over and no re-validation is needed
+    new, d = shallow_clone(b)
+    d["left"], d["right"] = b.right, b.left
+    d["udf"] = _swap_args_udf(b.udf)
+    if not isinstance(b, CrossOp):
+        d["left_key"], d["right_key"] = b.right_key, b.left_key
+        if b.hints.pk_side in ("left", "right"):
+            d["hints"] = dataclasses.replace(
+                b.hints,
+                pk_side="right" if b.hints.pk_side == "left" else "left")
     return _valid(new)
 
 
-def rotate(parent: Node, side: int) -> Optional[Node]:
+def rotate_guard(parent: Node, side: int, conjugate: bool = False) -> bool:
+    """Lemma-1 admissibility of `rotate(parent, side, conjugate)`, without
+    building the rotated tree (the hash-consing rewrite engine checks edges
+    whose result shape is already interned).
+
+    `conjugate=True` guards the rotation of the COMMUTED child — the child's
+    other grandchild splits off — evaluated directly on `parent` since
+    commutation changes no effective set."""
+    if not isinstance(parent, (MatchOp, CrossOp)):
+        return False
+    child = parent.children[side]
+    if not isinstance(child, (MatchOp, CrossOp)):
+        return False
+    if parent.props.schema_dependent or child.props.schema_dependent:
+        return False  # rotations change both operators' input schemas
+    if not roc(parent, child):
+        return False
+    if side == 0:
+        # p(a(X,Y),Z) -> a(X, p(Y,Z)): X leaves p's subtree, Z enters a's.
+        x = child.children[1 if conjugate else 0]
+        z = parent.children[1]
+    else:
+        # p(X, a(Y,Z)) -> a(p(X,Y), Z): Z leaves p's subtree, X enters a's.
+        z = child.children[0 if conjugate else 1]
+        x = parent.children[0]
+    if (eff_reads(parent) | eff_writes(parent)) & \
+            (x.attrs() if side == 0 else z.attrs()):
+        return False
+    if (eff_reads(child) | eff_writes(child)) & \
+            (z.attrs() if side == 0 else x.attrs()):
+        return False
+    return True
+
+
+def rotate(parent: Node, side: int, conjugate: bool = False) -> Optional[Node]:
     """Associativity: `p(a(X, Y), Z)` → `a(X, p(Y, Z))` (side=0 child) and the
     mirrored `p(X, a(Y, Z))` → `a(p(X, Y), Z)` (side=1 child).
+    `conjugate=True` commutes the child first, so the other grandchild splits
+    off (`p(a(X, Y), Z)` → `a(Y, p(X, Z))` up to argument order).
 
     Guards are Lemma 1 evaluated on effective sets: each operator must only
     reference attributes still below it after the rotation, and the two
@@ -334,41 +395,22 @@ def rotate(parent: Node, side: int) -> Optional[Node]:
     CoGroup consolidates records, so rotations around it are unsafe without
     per-group cardinality knowledge (conservative, as the paper's Sec. 4.3.2).
     """
-    if not isinstance(parent, (MatchOp, CrossOp)):
+    if not rotate_guard(parent, side, conjugate):
         return None
     child = parent.children[side]
-    if not isinstance(child, (MatchOp, CrossOp)):
-        return None
-    if parent.props.schema_dependent or child.props.schema_dependent:
-        return None  # rotations change both operators' input schemas
-    if not roc(parent, child):
-        return None
-
+    if conjugate:
+        child = commute(child)
+        if child is None:
+            return None
     if side == 0:
         x, y = child.children
-        z = parent.children[1]
-        # parent must not reference X's attrs; child must not reference Z's.
-        if (eff_reads(parent) | eff_writes(parent)) & x.attrs():
-            return None
-        if (eff_reads(child) | eff_writes(child)) & z.attrs():
-            return None
-        try:
-            inner = parent.with_children(y, z)
-            return _valid(child.with_children(x, inner), like=parent)
-        except (ValueError, KeyError):
-            return None
+        inner = combine_binary(parent, y, parent.children[1])
+        out = combine_binary(child, x, inner) if inner is not None else None
     else:
         y, z = child.children
-        x = parent.children[0]
-        if (eff_reads(parent) | eff_writes(parent)) & z.attrs():
-            return None
-        if (eff_reads(child) | eff_writes(child)) & x.attrs():
-            return None
-        try:
-            inner = parent.with_children(x, y)
-            return _valid(child.with_children(inner, z), like=parent)
-        except (ValueError, KeyError):
-            return None
+        inner = combine_binary(parent, parent.children[0], y)
+        out = combine_binary(child, inner, z) if inner is not None else None
+    return _valid(out, like=parent)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,46 @@
+"""Regression tests for `executor.joint_codes` (the composite-key
+factorizer shared by grouping, join and cogroup paths).
+
+PR 1 removed a dead duplicate `lens` computation whose surviving version
+crashed on scalar (0-d) key columns; scalars must code as one record."""
+
+import numpy as np
+
+from repro.core.executor import joint_codes
+
+
+def test_joint_codes_basic_two_groups():
+    (lc, rc), num = joint_codes([
+        [np.array([1, 2, 1])], [np.array([2, 3])]])
+    assert len(lc) == 3 and len(rc) == 2
+    assert lc[0] == lc[2] != lc[1]          # equal keys, equal codes
+    assert lc[1] == rc[0]                   # 2 codes equal across groups
+    assert num == 3                          # domain {1, 2, 3}
+
+
+def test_joint_codes_composite_keys():
+    (codes,), num = joint_codes([
+        [np.array([1, 1, 2]), np.array([10, 11, 10])]])
+    assert len(set(codes.tolist())) == 3 == num
+
+
+def test_joint_codes_scalar_column_regression():
+    # a 0-d key column is a single record, and must join up with equal
+    # keys in the other group
+    (sc, rc), num = joint_codes([
+        [np.int64(5)], [np.array([4, 5, 6])]])
+    assert sc.shape == (1,)
+    assert sc[0] == rc[1]
+    assert num == 3
+
+    # scalar composite keys too
+    (sc2,), num2 = joint_codes([[np.int64(1), np.int64(2)]])
+    assert sc2.shape == (1,) and num2 == 1
+
+
+def test_joint_codes_empty_group():
+    (ec, rc), num = joint_codes([
+        [np.array([], dtype=np.int64)], [np.array([7, 7])]])
+    assert ec.shape == (0,)
+    assert len(rc) == 2 and rc[0] == rc[1]
+    assert num == 1

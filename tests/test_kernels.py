@@ -3,6 +3,10 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+# optional dependency: skip cleanly (instead of failing collection)
+# in environments without hypothesis
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref

@@ -8,6 +8,11 @@ is told to the optimizer.
 """
 
 import numpy as np
+import pytest
+
+# optional dependency: skip cleanly (instead of failing collection)
+# in environments without hypothesis
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import executor, flow as F
