@@ -1,0 +1,125 @@
+"""Compiled-pipeline throughput: batches/sec for the serving pattern.
+
+The paper's evaluation amortizes one optimization over many executions of
+the rewritten flow.  This benchmark measures exactly that amortized path on
+the evaluation flows (q15, clickstream, textmining) plus a fully-fusable
+synthetic map chain, comparing three executors per flow:
+
+    eager       — numpy reference, per batch
+    masked_jit  — per-call `run_flow_jit` (re-traces the whole tree every
+                  batch: the pre-pipeline behaviour)
+    pipeline    — `compile_plan(...)` once, then warm-cache `run` per batch
+
+Reported per flow: batches/sec of each executor, the pipeline's cold
+(compile) time, and `speedup` = warm pipeline vs masked_jit.  `run()`
+returns rows so `benchmarks/run.py` persists them to BENCH_pipeline.json;
+`benchmarks/check_regression.py` gates CI on them.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import flows
+from repro.core import executor
+from repro.core.masked import run_flow_jit
+from repro.core.pipeline import compile_plan, executable_cache
+from repro.core.record import batch_from_dict
+
+# keep every executor comparison multiset-correct, not just fast
+CHECK_PARITY = True
+
+
+def map_chain_bindings(n_ops: int):
+    """Bindings factory for the synthetic flows.map_chain shape."""
+
+    def bindings(n=20_000, seed=0):
+        rng = np.random.default_rng(seed)
+        return {"I": batch_from_dict(
+            {f"f{i}": rng.integers(0, 1000, n).astype(np.int64)
+             for i in range(n_ops)})}
+
+    return bindings
+
+
+def _batches_per_sec(fn, batches: list, min_time: float = 0.05) -> float:
+    """Median batches/sec over per-batch timings (each batch re-run until
+    `min_time` so tiny timings stay measurable)."""
+    rates = []
+    for b in batches:
+        reps = 0
+        t0 = time.perf_counter()
+        while True:
+            fn(b)
+            reps += 1
+            dt = time.perf_counter() - t0
+            if dt >= min_time or reps >= 50:
+                break
+        rates.append(reps / dt)
+    return float(np.median(rates))
+
+
+def _bench_flow(name: str, root, mk_bindings, n: int, n_batches: int) -> dict:
+    batches = [mk_bindings(n, seed=100 + i) for i in range(n_batches)]
+    ref = executor.execute(root, batches[0])
+
+    eager_bps = _batches_per_sec(lambda b: executor.execute(root, b), batches)
+
+    masked_bps = _batches_per_sec(lambda b: run_flow_jit(root, b), batches)
+    if CHECK_PARITY:
+        assert run_flow_jit(root, batches[0]).equivalent(ref, atol=1e-4), name
+
+    cp = compile_plan(root)
+    t0 = time.perf_counter()
+    got = cp.run(batches[0])  # cold: lower + trace + compile
+    cold_ms = (time.perf_counter() - t0) * 1e3
+    if CHECK_PARITY:
+        assert got.equivalent(ref, atol=1e-4), name
+    pipe_bps = _batches_per_sec(cp.run, batches)
+
+    return {
+        "flow": name,
+        "rows": n,
+        "batches": n_batches,
+        "eager_bps": round(eager_bps, 2),
+        "masked_jit_bps": round(masked_bps, 2),
+        "pipeline_cold_ms": round(cold_ms, 1),
+        "pipeline_bps": round(pipe_bps, 2),
+        "speedup": round(pipe_bps / max(masked_bps, 1e-9), 1),
+    }
+
+
+def run(quick: bool = False):
+    # batch SIZE is identical in quick and full mode so the rates stay
+    # comparable across the two (check_regression compares quick CI runs
+    # against the committed full-run baseline); quick only trims repeats
+    n = 4_000
+    n_batches = 3 if quick else 8
+    executable_cache().clear()
+
+    cases = [("q15", *flows.q15()), ("clickstream", *flows.clickstream()),
+             ("textmining", *flows.textmining())]
+    chain_ops = 6
+    cases.append((f"map-chain-{chain_ops}", flows.map_chain(chain_ops),
+                  map_chain_bindings(chain_ops)))
+
+    rows = [_bench_flow(name, root, mkb, n, n_batches)
+            for name, root, mkb in cases]
+
+    from . import common
+
+    common.print_rows("bench_pipeline (compiled plan pipelines)", rows)
+    stats = executable_cache().stats()
+    chain_speedup = next(r["speedup"] for r in rows
+                         if r["flow"].startswith("map-chain"))
+    return {"name": "pipeline",
+            "map_chain_speedup": chain_speedup,
+            "cache": {"hits": stats.hits, "misses": stats.misses,
+                      "traces": stats.traces},
+            "rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,123 @@
+"""Benchmark regression gate: quick-run results vs committed baselines.
+
+    PYTHONPATH=src python -m benchmarks.check_regression [--factor 2.0]
+
+Compares the quick-run artifacts (BENCH_enumeration.quick.json,
+BENCH_pipeline.quick.json — produced by `benchmarks.run --quick`) against
+the committed baselines (BENCH_enumeration.json, BENCH_pipeline.json) and
+fails when a rate metric regressed by more than `factor`:
+
+    enumeration: plans/sec per flow
+    pipeline:    warm-cache batches/sec per flow
+
+Rows are matched by flow name; rows present in only one file are skipped
+(quick runs cover a subset of the full sweep).  The committed pipeline
+baseline must additionally show the fused pipeline >= `min-speedup` x the
+per-operator jit path on the map-chain flow (the fusion acceptance bar).
+
+Tolerances are env-configurable so CI hosts with different perf can widen
+them without code changes:
+
+    BENCH_REGRESSION_FACTOR   allowed slowdown factor   (default 2.0)
+    BENCH_MIN_FUSION_SPEEDUP  map-chain speedup floor   (default 3.0)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from .run import baseline_path
+
+# bench name -> (row list key, rate metric within a row)
+GATES = {
+    "enumeration": ("rows", "plans_per_s"),
+    "pipeline": ("rows", "pipeline_bps"),
+}
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _rows_by_flow(doc: dict, rows_key: str) -> dict:
+    return {r["flow"]: r for r in doc.get(rows_key, [])}
+
+
+def check_bench(name: str, factor: float, errors: list[str]) -> int:
+    rows_key, metric = GATES[name]
+    base_path = baseline_path(name, quick=False)
+    quick_path = baseline_path(name, quick=True)
+    if not os.path.exists(base_path):
+        errors.append(f"{name}: missing committed baseline {base_path}")
+        return 0
+    if not os.path.exists(quick_path):
+        errors.append(f"{name}: missing quick result {quick_path} "
+                      f"(run `benchmarks.run --quick --only {name}` first)")
+        return 0
+    base = _rows_by_flow(_load(base_path), rows_key)
+    quick = _rows_by_flow(_load(quick_path), rows_key)
+    compared = 0
+    for flow in sorted(set(base) & set(quick)):
+        if base[flow].get("rows") != quick[flow].get("rows"):
+            # rates are only comparable on identical per-batch data sizes
+            print(f"skip {name}/{flow}: rows {quick[flow].get('rows')} "
+                  f"!= baseline rows {base[flow].get('rows')}")
+            continue
+        b, q = base[flow][metric], quick[flow][metric]
+        compared += 1
+        if q * factor < b:
+            errors.append(
+                f"{name}/{flow}: {metric} {q:.4g} is more than {factor:.2g}x "
+                f"below baseline {b:.4g}")
+        else:
+            print(f"ok {name}/{flow}: {metric} quick={q:.4g} base={b:.4g}")
+    if compared == 0:
+        errors.append(f"{name}: no common flows between quick and baseline")
+    return compared
+
+
+def check_fusion_floor(min_speedup: float, errors: list[str]) -> None:
+    base_path = baseline_path("pipeline", quick=False)
+    if not os.path.exists(base_path):
+        return  # already reported by check_bench
+    doc = _load(base_path)
+    got = doc.get("map_chain_speedup")
+    if got is None:
+        errors.append("pipeline: baseline missing map_chain_speedup")
+    elif got < min_speedup:
+        errors.append(f"pipeline: committed map-chain fusion speedup {got} "
+                      f"below floor {min_speedup}")
+    else:
+        print(f"ok pipeline: baseline map-chain speedup {got} "
+              f">= {min_speedup}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--factor", type=float, default=float(
+        os.environ.get("BENCH_REGRESSION_FACTOR", "2.0")),
+        help="allowed slowdown factor vs baseline")
+    ap.add_argument("--min-speedup", type=float, default=float(
+        os.environ.get("BENCH_MIN_FUSION_SPEEDUP", "3.0")),
+        help="required map-chain fused-vs-per-op speedup in the baseline")
+    args = ap.parse_args()
+
+    errors: list[str] = []
+    for name in GATES:
+        check_bench(name, args.factor, errors)
+    check_fusion_floor(args.min_speedup, errors)
+
+    if errors:
+        print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        sys.exit(1)
+    print("bench regression gate passed")
+
+
+if __name__ == "__main__":
+    main()

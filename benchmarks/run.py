@@ -1,10 +1,13 @@
 """Run every benchmark (one per paper table/figure) and print a summary.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only a,b] [--list]
 
-The enumeration benchmark's rows are also written to BENCH_enumeration.json
-(next to this file's repo root) so the enumeration+costing perf trajectory
-is tracked across PRs.
+Benchmarks with committed perf baselines (enumeration, pipeline) have their
+rows persisted as BENCH_<name>.json at the repo root so the perf trajectory
+is tracked across PRs.  Full runs maintain the committed baselines; --quick
+runs (CI smoke) write BENCH_<name>.quick.json next to them so they never
+clobber the cross-PR trajectory — benchmarks/check_regression.py compares
+the two and gates CI on slowdowns.
 """
 
 from __future__ import annotations
@@ -17,24 +20,27 @@ import sys
 import time
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-# full runs maintain the committed perf baseline; --quick runs (CI smoke)
-# write next to it so they never clobber the cross-PR trajectory
-_BASELINE = os.path.join(_REPO_ROOT, "BENCH_enumeration.json")
-_BASELINE_QUICK = os.path.join(_REPO_ROOT, "BENCH_enumeration.quick.json")
+
+# benchmarks whose summaries are persisted as cross-PR baselines
+_BASELINED = ("enumeration", "pipeline")
 
 
-def _write_enumeration_baseline(summary: dict, quick: bool) -> None:
+def baseline_path(name: str, quick: bool) -> str:
+    suffix = ".quick.json" if quick else ".json"
+    return os.path.join(_REPO_ROOT, f"BENCH_{name}{suffix}")
+
+
+def _write_baseline(name: str, summary: dict, quick: bool) -> None:
     doc = {
-        "bench": "enumeration",
+        "bench": name,
         "quick": quick,
         "python": platform.python_version(),
         "machine": platform.machine(),
-        "online_budget_ms": summary.get("online_budget_ms"),
-        "within_budget": summary.get("within_budget"),
-        "max_ms": summary.get("max_ms"),
-        "rows": summary.get("rows", []),
     }
-    path = _BASELINE_QUICK if quick else _BASELINE
+    for k, v in summary.items():
+        if k not in ("name", "wall_s"):
+            doc[k] = v
+    path = baseline_path(name, quick)
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -45,20 +51,33 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller data / fewer repeats")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    ap.add_argument("--list", action="store_true",
+                    help="print available benchmark names and exit")
     args = ap.parse_args()
 
-    from . import (bench_clickstream, bench_enumeration, bench_q7, bench_q15,
-                   bench_roofline, bench_sca, bench_textmining)
+    from . import (bench_clickstream, bench_enumeration, bench_pipeline,
+                   bench_q7, bench_q15, bench_roofline, bench_sca,
+                   bench_textmining)
 
     benches = {
         "q7": bench_q7, "q15": bench_q15, "textmining": bench_textmining,
         "clickstream": bench_clickstream, "sca": bench_sca,
-        "enumeration": bench_enumeration, "roofline": bench_roofline,
+        "enumeration": bench_enumeration, "pipeline": bench_pipeline,
+        "roofline": bench_roofline,
     }
+    if args.list:
+        for name in benches:
+            print(name)
+        return
     if args.only:
-        benches = {k: v for k, v in benches.items()
-                   if k in args.only.split(",")}
+        wanted = args.only.split(",")
+        unknown = [w for w in wanted if w not in benches]
+        if unknown:
+            sys.exit(f"unknown benchmark(s) {unknown}; "
+                     f"available: {','.join(benches)}")
+        benches = {k: v for k, v in benches.items() if k in wanted}
 
     summaries = []
     for name, mod in benches.items():
@@ -68,8 +87,8 @@ def main() -> None:
         except Exception as e:  # pragma: no cover
             s = {"name": name, "error": repr(e)}
         s["wall_s"] = round(time.perf_counter() - t0, 2)
-        if name == "enumeration" and "error" not in s:
-            _write_enumeration_baseline(s, args.quick)
+        if name in _BASELINED and "error" not in s:
+            _write_baseline(name, s, args.quick)
             s = {k: v for k, v in s.items() if k != "rows"}
         summaries.append(s)
 

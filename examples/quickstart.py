@@ -2,8 +2,9 @@
 
 Build a PACT flow of black-box UDFs, let static code analysis derive the
 read/write sets, enumerate every safe reordering, price them on the TPU
-fabric model, and execute the best plan — eager, jit-masked, and
-data-parallel under shard_map.
+fabric model, and execute the best plan — eager, as a compiled pipeline
+(`optimize(...).compile().run(bindings)`: the serving path, one warm jitted
+executable over many request batches), and data-parallel under shard_map.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,7 +13,6 @@ import numpy as np
 
 from repro.core import executor, flow as F
 from repro.core.distributed import execute_distributed
-from repro.core.masked import run_flow_jit
 from repro.core.operators import Hints
 from repro.core.optimizer import optimize
 from repro.core.physical import Ctx
@@ -57,9 +57,16 @@ def main():
     best = res.best.flow
     print("\n== executing the best plan three ways")
     print("  eager      :", executor.execute(best, bindings).sorted_tuples())
-    print("  masked/jit :", run_flow_jit(best, bindings).sorted_tuples())
+    compiled = res.compile()  # fused + jitted once; warm for every batch
+    print("  pipeline   :", compiled.run(bindings).sorted_tuples())
     print("  distributed:", execute_distributed(
         res.best.plan, bindings).sorted_tuples())
+
+    batch2 = {"I": batch_from_dict({
+        "A": np.array([1, -4, 3, 9]), "B": np.array([2, -8, -6, 0])})}
+    print("\n== serving pattern: fresh batch, warm executable (no retrace)")
+    print("  pipeline   :", compiled.run(batch2).sorted_tuples())
+    print("  cache      :", compiled.cache_stats())
 
 
 if __name__ == "__main__":

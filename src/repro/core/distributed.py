@@ -27,10 +27,24 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# newer jax exposes shard_map as jax.shard_map; older versions keep it in
+# jax.experimental.  The replication-check kwarg was renamed check_rep ->
+# check_vma independently of that move, so feature-test the signature
+# rather than inferring it from where the function lives.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # pragma: no cover - version-dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
+try:
+    import inspect
+
+    _CHECK_KW = "check_vma" if "check_vma" in inspect.signature(
+        _shard_map).parameters else "check_rep"
+except (ValueError, TypeError):  # pragma: no cover - unintrospectable
+    _CHECK_KW = "check_rep"
+
 from . import masked as M
-from .cost import estimate
-from .operators import (CoGroupOp, CrossOp, MapOp, MatchOp, Node, ReduceOp,
-                        Source)
+from .operators import CoGroupOp, MatchOp, Node, ReduceOp, Source
 from .physical import PhysPlan
 from .record import RecordBatch
 
@@ -93,65 +107,55 @@ def _broadcast(b: M.MaskedBatch, axis: str, p: int) -> M.MaskedBatch:
 
 
 # ---------------------------------------------------------------------------
-# Plan walking (inside shard_map)
+# Stage walking (inside shard_map)
+#
+# The plan is lowered once (host-side) through pipeline.lower_phys, so the
+# per-shard body executes the same fused stages as the local compiled
+# pipeline: Map chains run as one stage with a single boundary compaction;
+# shipping collectives fire at stage inputs exactly where the physical plan
+# placed them.
 # ---------------------------------------------------------------------------
-def _exec_plan(plan: PhysPlan, shards: Mapping[str, M.MaskedBatch],
-               axis: str, p: int, use_kernels: bool,
-               stats_memo: dict, slack: float) -> M.MaskedBatch:
-    node = plan.node
+def _exec_stages(stages, shards: Mapping[str, M.MaskedBatch],
+                 axis: str, p: int, use_kernels: bool,
+                 stats_memo: dict, slack: float,
+                 root: Node) -> M.MaskedBatch:
+    from . import pipeline as PL
+
+    # shard capacities are global/p, so scaling vs per-shard nominal size
+    # mirrors masked.cardinality_scale on the global batch
+    scale = 1.0
+    for n_ in root.iter_nodes():
+        if isinstance(n_, Source) and n_.name in shards:
+            scale = max(scale, shards[n_.name].capacity * p
+                        / max(n_.num_records, 1))
 
     def compact(b: M.MaskedBatch, n: Node) -> M.MaskedBatch:
-        est = estimate(n, stats_memo).rows / p * slack
-        cap = int(min(b.capacity, max(M._round8(est), 8)))
-        return b.compact(cap) if cap < b.capacity else b
+        return M.compact_to_estimate(b, n, stats_memo, slack, scale, shards=p)
 
-    if isinstance(node, Source):
-        return shards[node.name]
-
-    ins = [_exec_plan(ip, shards, axis, p, use_kernels, stats_memo, slack)
-           for ip in plan.inputs]
-
-    # shipping
-    shipped = []
-    for i, (b, how) in enumerate(zip(ins, plan.ship)):
-        if how == "forward":
-            shipped.append(b)
-        elif how == "partition":
-            if isinstance(node, ReduceOp):
-                keys = node.key
-            elif isinstance(node, (MatchOp, CoGroupOp)):
-                keys = node.left_key if i == 0 else node.right_key
+    results: list[M.MaskedBatch] = []
+    for st in stages:
+        node = st.top
+        ins = []
+        for i, (ref, how) in enumerate(zip(st.inputs, st.ship)):
+            b = shards[ref[1]] if ref[0] == "source" else results[ref[1]]
+            if how == "forward":
+                pass
+            elif how == "partition":
+                if isinstance(node, ReduceOp):
+                    keys = node.key
+                elif isinstance(node, (MatchOp, CoGroupOp)):
+                    keys = node.left_key if i == 0 else node.right_key
+                else:
+                    raise ValueError(f"partition ship on {type(node).__name__}")
+                b = compact(_repartition(b, keys, axis, p),
+                            st.input_plans[i].node)
+            elif how == "broadcast":
+                b = _broadcast(b, axis, p)
             else:
-                raise ValueError(f"partition ship on {type(node).__name__}")
-            nb = _repartition(b, keys, axis, p)
-            shipped.append(compact(nb, plan.inputs[i].node))
-        elif how == "broadcast":
-            shipped.append(_broadcast(b, axis, p))
-        else:
-            raise ValueError(how)
-
-    # local execution (masked operators per shard)
-    if isinstance(node, MapOp):
-        out = M._exec_map(node, shipped[0])
-    elif isinstance(node, ReduceOp):
-        out = M._exec_reduce(node, shipped[0], use_kernels)
-    elif isinstance(node, MatchOp):
-        lb, rb = shipped
-        if node.hints.pk_side == "right":
-            out = M._exec_match_pk(node, lb, rb, use_kernels)
-        elif node.hints.pk_side == "left":
-            from .reorder import commute as _commute
-
-            out = M._exec_match_pk(_commute(node), rb, lb, use_kernels)
-        else:
-            out = M._exec_cross(node, lb, rb, node.left_key, node.right_key)
-    elif isinstance(node, CrossOp):
-        out = M._exec_cross(node, *shipped)
-    elif isinstance(node, CoGroupOp):
-        out = M._exec_cogroup(node, *shipped, use_kernels)
-    else:
-        raise TypeError(type(node).__name__)
-    return compact(out, node)
+                raise ValueError(how)
+            ins.append(b)
+        results.append(compact(PL.execute_stage(st, ins, use_kernels), node))
+    return results[-1]
 
 
 # ---------------------------------------------------------------------------
@@ -203,17 +207,23 @@ def execute_distributed(plan: PhysPlan, bindings: Mapping[str, RecordBatch],
         global_batches[name] = M.MaskedBatch(
             {f: jnp.asarray(v) for f, v in cols.items()}, jnp.asarray(valid))
 
+    from . import pipeline as PL
+
+    stages = PL.lower_phys(plan)
     stats_memo: dict = {}
     names = sorted(global_batches)
     in_specs = tuple(jax.tree.map(lambda _: P(axis), global_batches[n])
                      for n in names)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh, in_specs=in_specs, out_specs=P(axis),
-        check_vma=False)
+        _shard_map, mesh=mesh, in_specs=in_specs, out_specs=P(axis),
+        **{_CHECK_KW: False})
     def run(*shards):
         local = dict(zip(names, shards))
-        return _exec_plan(plan, local, axis, p, use_kernels, stats_memo, slack)
+        if not stages:
+            return local[plan.node.name]
+        return _exec_stages(stages, local, axis, p, use_kernels, stats_memo,
+                            slack, plan.node)
 
     out = run(*[global_batches[n] for n in names])
     return out.to_record_batch()

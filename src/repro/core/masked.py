@@ -126,6 +126,32 @@ def _sort_by_key(b: MaskedBatch, key: Sequence[str]):
     return MaskedBatch(cols, valid), seg, is_start
 
 
+def compact_to_estimate(b: "MaskedBatch", node: Node, stats_memo: dict,
+                        slack: float, scale: float = 1.0,
+                        shards: int = 1) -> "MaskedBatch":
+    """Compact `b` to the bucketed capacity of `node`'s cardinality estimate
+    (`estimate * slack * scale / shards`, floored at 8) — the single
+    compaction policy shared by the per-op masked walk, the compiled
+    pipeline and the distributed per-shard body."""
+    est = estimate(node, stats_memo).rows / shards * slack * scale
+    cap = int(min(b.capacity, max(bucket_capacity(est), 8)))
+    return b.compact(cap) if cap < b.capacity else b
+
+
+def cardinality_scale(root: Node, bindings: Mapping[str, "MaskedBatch"]) -> float:
+    """Upward correction for cost-model row estimates when bound batches
+    exceed a Source's declared `num_records`.  Capacities are static, so the
+    factor is trace-time static too; it never scales below 1 — estimates
+    generous relative to the actual data are already bounded by
+    `min(b.capacity, ...)` at every compaction site."""
+    s = 1.0
+    for node in root.iter_nodes():
+        if isinstance(node, Source) and node.name in bindings:
+            s = max(s, bindings[node.name].capacity
+                    / max(node.num_records, 1))
+    return s
+
+
 def segment_reduce_backend(use_kernels: bool):
     if not use_kernels:
         return JitSegmentOps
@@ -314,20 +340,22 @@ def execute_masked(root: Node, bindings: Mapping[str, MaskedBatch],
     """Execute `root` on masked batches (traceable: call under jit).
 
     `compact=True` re-packs intermediates to `estimate(node) * slack`
-    capacity (static — derived from the cost model at trace time), bounding
-    memory exactly the way the paper's optimizer uses cardinality hints.
+    capacity (static — derived from the cost model at trace time, rounded up
+    to a geometric `bucket_capacity` so repeated traces share shapes),
+    bounding memory exactly the way the paper's optimizer uses cardinality
+    hints.  When the bound batches are LARGER than the flow's nominal
+    `Source.num_records`, estimates are scaled up proportionally —
+    compaction must never drop valid rows just because the request outgrew
+    the scale the flow was declared at.
     """
     stats_memo: dict = {}
     memo: dict[int, MaskedBatch] = {}
+    scale = cardinality_scale(root, bindings)
 
     def maybe_compact(node: Node, b: MaskedBatch) -> MaskedBatch:
         if not compact:
             return b
-        est = estimate(node, stats_memo).rows * compact_slack
-        cap = int(min(b.capacity, max(_round8(est), 8)))
-        if cap < b.capacity:
-            return b.compact(cap)
-        return b
+        return compact_to_estimate(b, node, stats_memo, compact_slack, scale)
 
     def run(node: Node) -> MaskedBatch:
         if id(node) in memo:
@@ -365,6 +393,18 @@ def execute_masked(root: Node, bindings: Mapping[str, MaskedBatch],
 
 def _round8(x: float) -> int:
     return int(np.ceil(max(x, 1.0) / 8.0) * 8)
+
+
+def bucket_capacity(x: float) -> int:
+    """Geometric capacity bucket: the smallest 8·2^k >= x.
+
+    Every static capacity a trace sees (source padding, intermediate
+    compaction) is drawn from this ladder, so a flow of n operators with n
+    distinct cardinality estimates traces O(log n) distinct shapes instead of
+    O(n) — the jit-cache analogue of the paper's spill-buffer size classes.
+    """
+    n8 = _round8(x) // 8
+    return 8 * (1 << (n8 - 1).bit_length())
 
 
 def run_flow_jit(root: Node, bindings: Mapping[str, RecordBatch],

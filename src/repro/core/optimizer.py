@@ -45,6 +45,14 @@ class RankedPlan:
     def order(self) -> str:
         return "->".join(reversed(self.flow.op_names()))
 
+    def compile(self, use_kernels: bool = False, compact_slack: float = 2.0,
+                cache=None):
+        """Lower this plan into a ready-to-run `pipeline.CompiledPlan`."""
+        from .pipeline import compile_plan
+
+        return compile_plan(self.flow, use_kernels=use_kernels,
+                            compact_slack=compact_slack, cache=cache)
+
 
 @dataclasses.dataclass(frozen=True)
 class OptResult:
@@ -61,6 +69,15 @@ class OptResult:
         `ranked` holds only the flows that were actually priced; the space
         the search covered is `num_enumerated`."""
         return self.num_enumerated or len(self.ranked)
+
+    def compile(self, use_kernels: bool = False, compact_slack: float = 2.0,
+                cache=None):
+        """Compile the best plan: `optimize(flow).compile().run(bindings)`.
+
+        Repeated optimize+compile of equal-shaped flows returns handles that
+        share one warm executable through the plan-executable cache."""
+        return self.best.compile(use_kernels=use_kernels,
+                                 compact_slack=compact_slack, cache=cache)
 
     def pick_rank_intervals(self, k: int = 10) -> list[RankedPlan]:
         """K plans at regular rank intervals (the paper's Figs. 5-7 method)."""

@@ -1,0 +1,513 @@
+"""Compiled plan pipelines: fused lowering + a plan-executable cache.
+
+The optimizer's output only pays off if the chosen plan runs fast
+*repeatedly*: the serving pattern is millions of small request batches over a
+handful of flow shapes.  `execute_masked` walks the operator tree node by
+node, compacting after every operator and re-tracing per call — fine for a
+one-off, wrong for the hot path.  This module lowers a plan once into a
+pipeline of STAGES and jit-compiles the whole pipeline into one executable
+(DESIGN.md §5):
+
+* maximal unary Map/filter chains fuse into a single traced stage — one
+  dispatch and one boundary compaction instead of N of each (a per-operator
+  compaction is an O(cap log cap) argsort);
+* Reduce / Match / Cross / CoGroup remain explicit stage boundaries (they
+  re-shape the batch: sorts, probes, segment reductions), routed through the
+  Pallas kernels when `use_kernels` is set;
+* every static capacity is drawn from the geometric `bucket_capacity`
+  ladder, so the number of distinct traced shapes stays O(log n).
+
+Executables are cached in a process-wide `ExecutableCache` keyed on a
+commute-invariant SEMANTIC fingerprint of the flow (operator names, UDF
+code objects, keys, hints, source schemas and cardinalities — see
+`semantic_key`) plus source capacity buckets, `use_kernels` and
+`compact_slack`.  Commute invariance means two plans that differ only in
+join argument order — multiset-equal by construction — share one warm
+executable; fingerprinting UDF code by VALUE means a rebuilt-from-scratch
+but identical flow also hits, while two same-named operators with
+different UDFs never collide.  `optimize(...)` returns a result whose
+`.compile()` yields a ready-to-run `CompiledPlan`:
+
+    res = optimize(flow)
+    cp = res.compile()
+    out = cp.run(bindings)      # cold: trace + compile
+    out = cp.run(bindings2)     # warm: cached executable, no retrace
+
+The same lowering drives `distributed.execute_distributed`: per-shard local
+work executes the fused stages, with shipping collectives at stage inputs.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+from typing import Mapping, Optional, Sequence
+
+import jax
+import numpy as np
+
+from . import masked as M
+from .operators import (CoGroupOp, CrossOp, MapOp, MatchOp, Node, ReduceOp,
+                        Source)
+from .physical import PhysPlan
+from .record import RecordBatch
+
+
+# ---------------------------------------------------------------------------
+# Semantic flow fingerprint (the executable-cache identity)
+#
+# `struct_id`/`commute_id` intern on operator NAMES only — fine inside one
+# enumeration run (DESIGN.md §6.3) but unsafe as a process-wide cache key:
+# two same-named operators with different UDFs, keys or hints would collide.
+# `semantic_key` fingerprints by value instead: UDF code objects (unwrapping
+# the `commute` swap wrapper), keys, hints and source cardinalities, with
+# binary-operator sides sorted so the key is commute-invariant.  Anything
+# whose repr is identity-based (a closure over a lambda, say) degrades to a
+# spurious MISS — a retrace, never a wrong answer.
+# ---------------------------------------------------------------------------
+def _safe_repr(x) -> str:
+    try:
+        return repr(x)
+    except Exception:  # pragma: no cover - defensive
+        return f"<unreprable {type(x).__name__}>"
+
+
+def _code_fp(code) -> tuple:
+    """Recursive code-object fingerprint: bytecode + consts (descending into
+    nested code objects, so a changed constant inside a nested lambda or
+    comprehension changes the fingerprint) + referenced names."""
+    consts = tuple(_code_fp(c) if hasattr(c, "co_code") else _safe_repr(c)
+                   for c in code.co_consts)
+    return (code.co_code, consts, code.co_names)
+
+
+def _code_names(code) -> set:
+    names = set(code.co_names)
+    for c in code.co_consts:
+        if hasattr(c, "co_code"):
+            names |= _code_names(c)
+    return names
+
+
+def _value_fp(v, seen: set):
+    """Fingerprint an environment value (closure cell / global / default).
+    Functions recurse into their own code+environment so helper functions
+    rebuilt per flow construction still compare equal by value; everything
+    else falls back to repr (identity-laden reprs degrade to spurious cache
+    misses — a retrace, never a wrong answer)."""
+    if callable(v) and (hasattr(v, "__code__")
+                        or hasattr(v, "__wrapped_pair_udf__")):
+        return _udf_fingerprint(v, seen)
+    if isinstance(v, np.ndarray):  # repr truncates large arrays ("...")
+        return ("ndarray", v.shape, str(v.dtype),
+                hashlib.sha1(np.ascontiguousarray(v).tobytes()).hexdigest())
+    return _safe_repr(v)
+
+
+def _udf_fingerprint(udf, seen: Optional[set] = None) -> tuple:
+    if seen is None:
+        seen = set()
+    while hasattr(udf, "__wrapped_pair_udf__"):  # commute's arg-swap wrapper
+        udf = udf.__wrapped_pair_udf__
+    code = getattr(udf, "__code__", None)
+    if code is None:
+        return ("opaque", _safe_repr(udf))
+    if id(udf) in seen:  # recursive helper reference
+        return ("recursive",)
+    seen.add(id(udf))
+
+    def cell_fp(c):
+        try:
+            return _value_fp(c.cell_contents, seen)
+        except ValueError:  # empty cell
+            return "<empty-cell>"
+
+    cells = tuple(cell_fp(c) for c in (udf.__closure__ or ()))
+    defaults = tuple(_value_fp(d, seen) for d in (udf.__defaults__ or ()))
+    gl = getattr(udf, "__globals__", {})
+    gvals = tuple(sorted(((n, _value_fp(gl[n], seen))
+                          for n in _code_names(code) if n in gl),
+                         key=lambda t: t[0]))
+    return (_code_fp(code), cells, defaults, gvals)
+
+
+def _hints_fingerprint(h, pk_sem) -> tuple:
+    # pk_side is expressed as the pk child's semantic key (commute swaps the
+    # left/right labels but not which child holds the unique key)
+    return (h.selectivity, h.distinct_keys, h.cpu_flops_per_record,
+            h.join_fanout, h.group_selectivity, pk_sem)
+
+
+def semantic_key(node: Node, _memo: Optional[dict] = None) -> tuple:
+    """Commute-invariant, identity-free fingerprint of a flow's semantics."""
+    if _memo is None:
+        _memo = {}
+    hit = _memo.get(id(node))
+    if hit is not None:
+        return hit
+    if isinstance(node, Source):
+        out = ("src", node.name, _schema_sig(node.out_schema),
+               node.num_records, node.partitioned_on, node.sorted_on)
+    elif isinstance(node, MapOp):
+        out = ("map", node.name, _udf_fingerprint(node.udf),
+               _hints_fingerprint(node.hints, None),
+               semantic_key(node.child, _memo))
+    elif isinstance(node, ReduceOp):
+        out = ("reduce", node.name, _udf_fingerprint(node.udf), node.key,
+               _hints_fingerprint(node.hints, None),
+               semantic_key(node.child, _memo))
+    elif isinstance(node, (MatchOp, CrossOp, CoGroupOp)):
+        lsem = semantic_key(node.left, _memo)
+        rsem = semantic_key(node.right, _memo)
+        lk = getattr(node, "left_key", ())
+        rk = getattr(node, "right_key", ())
+        # key=repr: fingerprints mix bytes/str/None, which plain tuple
+        # comparison cannot order (repr of nested tuples is deterministic)
+        sides = tuple(sorted(((lsem, lk), (rsem, rk)), key=repr))
+        pk_sem = {"left": lsem, "right": rsem}.get(node.hints.pk_side)
+        out = (type(node).__name__, node.name, _udf_fingerprint(node.udf),
+               sides, _hints_fingerprint(node.hints, pk_sem))
+    else:
+        raise TypeError(type(node).__name__)
+    _memo[id(node)] = out
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Stage representation
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One fused execution step of a lowered plan.
+
+    `ops` is bottom-up: for a `chain` stage it is the fused run of MapOps,
+    otherwise a single operator.  `inputs` are `("source", name)` or
+    `("stage", index)` references into the stage list (a DAG in topological
+    order).  `ship`/`input_plans` carry the physical shipping strategy and
+    the producing sub-plan per input when lowered from a `PhysPlan`
+    (`lower_phys`); logical lowering ships everything `forward`.
+    """
+
+    kind: str                   # 'chain'|'reduce'|'match'|'cross'|'cogroup'
+    ops: tuple
+    inputs: tuple
+    ship: tuple = ()
+    input_plans: tuple = ()
+
+    @property
+    def top(self) -> Node:
+        return self.ops[-1]
+
+
+_KIND = {ReduceOp: "reduce", MatchOp: "match", CrossOp: "cross",
+         CoGroupOp: "cogroup"}
+
+
+def _use_counts(root, children_of) -> dict:
+    """Number of distinct consumers per sub-object id (flows may share
+    subtree OBJECTS — the executors memoize on id; fusion must not inline a
+    shared subtree into one of its consumers and recompute it elsewhere)."""
+    counts: collections.Counter = collections.Counter()
+    seen: set = set()
+    stack = [root]
+    while stack:
+        n = stack.pop()
+        if id(n) in seen:
+            continue
+        seen.add(id(n))
+        for c in children_of(n):
+            counts[id(c)] += 1
+            stack.append(c)
+    return counts
+
+
+def lower(root: Node) -> tuple[Stage, ...]:
+    """Lower a logical flow into topologically ordered fused stages.
+
+    Shared subtree objects become shared stages (computed once); a Map
+    chain therefore only fuses through nodes with a single consumer.
+    """
+    uses = _use_counts(root, lambda n: n.children)
+    stages: list[Stage] = []
+    memo: dict[int, tuple] = {}
+
+    def visit(node: Node) -> tuple:
+        ref = memo.get(id(node))
+        if ref is not None:
+            return ref
+        if isinstance(node, Source):
+            ref = ("source", node.name)
+        elif isinstance(node, MapOp):
+            chain = [node]
+            n = node.child
+            while isinstance(n, MapOp) and uses[id(n)] == 1:
+                chain.append(n)
+                n = n.child
+            child_ref = visit(n)
+            stages.append(Stage(kind="chain", ops=tuple(reversed(chain)),
+                                inputs=(child_ref,), ship=("forward",)))
+            ref = ("stage", len(stages) - 1)
+        else:
+            refs = tuple(visit(c) for c in node.children)
+            stages.append(Stage(kind=_KIND[type(node)], ops=(node,),
+                                inputs=refs, ship=("forward",) * len(refs)))
+            ref = ("stage", len(stages) - 1)
+        memo[id(node)] = ref
+        return ref
+
+    ref = visit(root)
+    if ref[0] == "source":  # bare-source flow: identity stage list
+        return ()
+    return tuple(stages)
+
+
+def lower_phys(plan: PhysPlan) -> tuple[Stage, ...]:
+    """Lower a physical plan: same fusion, plus per-input ship strategies."""
+    uses = _use_counts(plan, lambda p: p.inputs)
+    stages: list[Stage] = []
+    memo: dict[int, tuple] = {}
+
+    def visit(p: PhysPlan) -> tuple:
+        ref = memo.get(id(p))
+        if ref is not None:
+            return ref
+        node = p.node
+        if isinstance(node, Source):
+            ref = ("source", node.name)
+        elif isinstance(node, MapOp) and p.ship == ("forward",):
+            chain = [p]
+            cur = p.inputs[0]
+            while isinstance(cur.node, MapOp) and cur.ship == ("forward",) \
+                    and uses[id(cur)] == 1:
+                chain.append(cur)
+                cur = cur.inputs[0]
+            child_ref = visit(cur)
+            stages.append(Stage(
+                kind="chain", ops=tuple(cp.node for cp in reversed(chain)),
+                inputs=(child_ref,), ship=("forward",), input_plans=(cur,)))
+            ref = ("stage", len(stages) - 1)
+        else:
+            refs = tuple(visit(ip) for ip in p.inputs)
+            stages.append(Stage(kind=_KIND[type(node)], ops=(node,),
+                                inputs=refs, ship=p.ship,
+                                input_plans=p.inputs))
+            ref = ("stage", len(stages) - 1)
+        memo[id(p)] = ref
+        return ref
+
+    ref = visit(plan)
+    if ref[0] == "source":
+        return ()
+    return tuple(stages)
+
+
+# ---------------------------------------------------------------------------
+# Stage execution (traceable; shared by the local pipeline and the
+# per-shard body of distributed execution)
+# ---------------------------------------------------------------------------
+def execute_stage(stage: Stage, ins: Sequence[M.MaskedBatch],
+                  use_kernels: bool) -> M.MaskedBatch:
+    """Run one stage's local (per-worker) computation on masked batches."""
+    if stage.kind == "chain":
+        b = ins[0]
+        for op in stage.ops:
+            b = M._exec_map(op, b)
+        return b
+    node = stage.top
+    if stage.kind == "reduce":
+        return M._exec_reduce(node, ins[0], use_kernels)
+    if stage.kind == "match":
+        lb, rb = ins
+        if node.hints.pk_side == "right":
+            return M._exec_match_pk(node, lb, rb, use_kernels)
+        if node.hints.pk_side == "left":
+            from .reorder import commute as _commute
+
+            return M._exec_match_pk(_commute(node), rb, lb, use_kernels)
+        return M._exec_cross(node, lb, rb, node.left_key, node.right_key)
+    if stage.kind == "cross":
+        return M._exec_cross(node, *ins)
+    if stage.kind == "cogroup":
+        return M._exec_cogroup(node, *ins, use_kernels)
+    raise TypeError(f"unknown stage kind {stage.kind!r}")
+
+
+def run_stages(stages: Sequence[Stage], bindings: Mapping[str, M.MaskedBatch],
+               use_kernels: bool, compact_slack: float,
+               stats_memo: dict, scale: float = 1.0) -> M.MaskedBatch:
+    """Execute a lowered stage list on masked batches (traceable).
+
+    Compaction fires once per stage boundary (not per fused operator), to
+    the bucketed capacity of `estimate * slack * scale` — `scale` corrects
+    for bound batches larger than the flow's nominal source sizes (see
+    `masked.cardinality_scale`).
+    """
+    results: list[M.MaskedBatch] = []
+    for st in stages:
+        ins = [bindings[ref[1]] if ref[0] == "source" else results[ref[1]]
+               for ref in st.inputs]
+        out = execute_stage(st, ins, use_kernels)
+        results.append(M.compact_to_estimate(out, st.top, stats_memo,
+                                             compact_slack, scale))
+    return results[-1]
+
+
+# ---------------------------------------------------------------------------
+# Plan-executable cache
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class CacheStats:
+    hits: int
+    misses: int
+    traces: int
+    size: int
+
+
+class ExecutableCache:
+    """LRU cache of jitted pipeline executables.
+
+    Key: `(semantic_key(flow), per-source (name, schema signature, capacity
+    bucket), use_kernels, compact_slack)`.  `traces` counts actual jit
+    traces (incremented from inside the traced body), so tests can assert
+    warm calls never re-trace.
+    """
+
+    def __init__(self, maxsize: int = 256):
+        self.maxsize = maxsize
+        self._data: collections.OrderedDict = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.traces = 0
+
+    def get(self, key):
+        fn = self._data.get(key)
+        if fn is None:
+            self.misses += 1
+            return None
+        self._data.move_to_end(key)
+        self.hits += 1
+        return fn
+
+    def put(self, key, fn) -> None:
+        self._data[key] = fn
+        self._data.move_to_end(key)
+        while len(self._data) > self.maxsize:
+            self._data.popitem(last=False)
+
+    def stats(self) -> CacheStats:
+        return CacheStats(hits=self.hits, misses=self.misses,
+                          traces=self.traces, size=len(self._data))
+
+    def clear(self) -> None:
+        self._data.clear()
+        self.hits = self.misses = self.traces = 0
+
+
+_CACHE = ExecutableCache()
+
+
+def executable_cache() -> ExecutableCache:
+    """The process-wide plan-executable cache."""
+    return _CACHE
+
+
+def _schema_sig(schema) -> tuple:
+    return (tuple(schema.fields),
+            tuple(str(schema.dtype(f)) for f in schema.fields))
+
+
+# ---------------------------------------------------------------------------
+# Compiled plan handle
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CompiledPlan:
+    """A lowered flow plus the cache that holds its warm executables.
+
+    `run(bindings)` binds RecordBatches (padding each source to its
+    capacity bucket), fetches-or-traces the jitted executable for the
+    resulting shape signature, executes, and returns a RecordBatch.
+    """
+
+    flow: Node
+    stages: tuple
+    use_kernels: bool = False
+    compact_slack: float = 2.0
+    cache: ExecutableCache = dataclasses.field(default_factory=executable_cache)
+
+    def __post_init__(self):
+        self._sources = {n.name: n for n in self.flow.iter_nodes()
+                         if isinstance(n, Source)}
+        self._sem = semantic_key(self.flow)
+
+    # -- binding -------------------------------------------------------------
+    def _bind(self, bindings: Mapping[str, RecordBatch]):
+        masked: dict[str, M.MaskedBatch] = {}
+        sig = []
+        for name in sorted(self._sources):
+            src = self._sources[name]
+            if name not in bindings:
+                raise KeyError(f"no binding for source {name!r}")
+            b = bindings[name].to_numpy().compact().project(
+                list(src.out_schema.fields))
+            cap = M.bucket_capacity(max(b.capacity, 1))
+            masked[name] = M.MaskedBatch.from_record_batch(b, cap)
+            sig.append((name, _schema_sig(src.out_schema), cap))
+        return masked, tuple(sig)
+
+    # -- executable lookup ---------------------------------------------------
+    def _executable(self, source_sig: tuple):
+        key = (self._sem, source_sig, self.use_kernels, self.compact_slack)
+        fn = self.cache.get(key)
+        if fn is None:
+            stages, use_kernels = self.stages, self.use_kernels
+            slack, cache = self.compact_slack, self.cache
+            stats_memo: dict = {}
+
+            flow = self.flow
+
+            def _body(mb):
+                cache.traces += 1  # trace-time side effect: counts retraces
+                if not stages:
+                    (only,) = mb.values()
+                    return only
+                return run_stages(stages, mb, use_kernels, slack, stats_memo,
+                                  scale=M.cardinality_scale(flow, mb))
+
+            fn = jax.jit(_body)
+            self.cache.put(key, fn)
+        return fn
+
+    # -- execution -----------------------------------------------------------
+    def run(self, bindings: Mapping[str, RecordBatch]) -> RecordBatch:
+        """Execute on fresh source batches; warm-cache calls do not retrace."""
+        masked, sig = self._bind(bindings)
+        return self._executable(sig)(masked).to_record_batch()
+
+    def run_masked(self, masked_bindings: Mapping[str, M.MaskedBatch]
+                   ) -> M.MaskedBatch:
+        """Traceable entry point: execute on already-masked batches (for
+        embedding a compiled flow inside a larger jitted program)."""
+        stats_memo: dict = {}
+        if not self.stages:
+            (only,) = masked_bindings.values()
+            return only
+        return run_stages(self.stages, masked_bindings, self.use_kernels,
+                          self.compact_slack, stats_memo,
+                          scale=M.cardinality_scale(self.flow,
+                                                    masked_bindings))
+
+    def cache_stats(self) -> CacheStats:
+        return self.cache.stats()
+
+
+def compile_plan(flow_or_plan, use_kernels: bool = False,
+                 compact_slack: float = 2.0,
+                 cache: Optional[ExecutableCache] = None) -> CompiledPlan:
+    """Lower a logical flow (or the logical tree of a PhysPlan) into a
+    `CompiledPlan` ready for repeated execution."""
+    flow = flow_or_plan.node if isinstance(flow_or_plan, PhysPlan) \
+        else flow_or_plan
+    return CompiledPlan(flow=flow, stages=lower(flow),
+                        use_kernels=use_kernels, compact_slack=compact_slack,
+                        cache=cache or _CACHE)

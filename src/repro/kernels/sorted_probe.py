@@ -37,7 +37,10 @@ def _kernel(k_ref, q_ref, o_ref, acc):
 
     keys = k_ref[...]          # [1, BLOCK_K]
     qs = q_ref[...]            # [BLOCK_Q, 1]
-    acc[...] += jnp.sum((keys < qs).astype(jnp.int32), axis=1, keepdims=True)
+    # dtype pinned: under jax_enable_x64 an unpinned sum promotes int32 to
+    # int64, which the int32 VMEM accumulator ref rejects
+    acc[...] += jnp.sum((keys < qs).astype(jnp.int32), axis=1, keepdims=True,
+                        dtype=jnp.int32)
 
     @pl.when(j == pl.num_programs(1) - 1)
     def _emit():
