@@ -2,24 +2,29 @@
 
     PYTHONPATH=src python -m benchmarks.check_regression [--factor 2.0]
 
-Compares the quick-run artifacts (BENCH_enumeration.quick.json,
-BENCH_pipeline.quick.json — produced by `benchmarks.run --quick`) against
-the committed baselines (BENCH_enumeration.json, BENCH_pipeline.json) and
-fails when a rate metric regressed by more than `factor`:
+Compares the quick-run artifacts (BENCH_<name>.quick.json — produced by
+`benchmarks.run --quick`) against the committed baselines
+(BENCH_<name>.json) and fails when a rate metric regressed by more than
+`factor`:
 
     enumeration: plans/sec per flow
     pipeline:    warm-cache batches/sec per flow
+    aggregation: shuffled-row reduction factor per flow
 
 Rows are matched by flow name; rows present in only one file are skipped
 (quick runs cover a subset of the full sweep).  The committed pipeline
 baseline must additionally show the fused pipeline >= `min-speedup` x the
-per-operator jit path on the map-chain flow (the fusion acceptance bar).
+per-operator jit path on the map-chain flow (the fusion acceptance bar),
+and BOTH aggregation artifacts must show the combiner inserted with
+>= `min-shuffle-reduction` x fewer rows crossing the repartition (the
+aggregation push-down acceptance bar).
 
 Tolerances are env-configurable so CI hosts with different perf can widen
 them without code changes:
 
-    BENCH_REGRESSION_FACTOR   allowed slowdown factor   (default 2.0)
-    BENCH_MIN_FUSION_SPEEDUP  map-chain speedup floor   (default 3.0)
+    BENCH_REGRESSION_FACTOR       allowed slowdown factor       (default 2.0)
+    BENCH_MIN_FUSION_SPEEDUP      map-chain speedup floor       (default 3.0)
+    BENCH_MIN_SHUFFLE_REDUCTION   aggregation reduction floor   (default 3.0)
 """
 
 from __future__ import annotations
@@ -35,6 +40,7 @@ from .run import baseline_path
 GATES = {
     "enumeration": ("rows", "plans_per_s"),
     "pipeline": ("rows", "pipeline_bps"),
+    "aggregation": ("rows", "reduction_factor"),
 }
 
 
@@ -96,6 +102,34 @@ def check_fusion_floor(min_speedup: float, errors: list[str]) -> None:
               f">= {min_speedup}")
 
 
+def check_aggregation_floor(min_reduction: float, errors: list[str]) -> None:
+    """Acceptance bar: the combiner is inserted and cuts shuffled rows by
+    >= min_reduction in BOTH the committed baseline and the quick run."""
+    for quick in (False, True):
+        path = baseline_path("aggregation", quick=quick)
+        if not os.path.exists(path):
+            return  # already reported by check_bench
+        tag = "quick" if quick else "baseline"
+        n_before = len(errors)
+        doc = _load(path)
+        wire = doc.get("wire_reduction_factor")
+        if wire is None or wire < min_reduction:
+            errors.append(f"aggregation[{tag}]: wire reduction {wire} "
+                          f"below floor {min_reduction}")
+        for row in doc.get("rows", []):
+            if not row.get("combiner_inserted"):
+                errors.append(f"aggregation[{tag}]/{row.get('flow')}: "
+                              "chosen plan has no combiner")
+            elif row.get("reduction_factor", 0) < min_reduction:
+                errors.append(
+                    f"aggregation[{tag}]/{row.get('flow')}: shuffled-row "
+                    f"reduction {row.get('reduction_factor')} below floor "
+                    f"{min_reduction}")
+        if len(errors) == n_before:
+            print(f"ok aggregation[{tag}]: wire reduction {wire} "
+                  f">= {min_reduction}, combiner inserted on every flow")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--factor", type=float, default=float(
@@ -104,12 +138,16 @@ def main() -> None:
     ap.add_argument("--min-speedup", type=float, default=float(
         os.environ.get("BENCH_MIN_FUSION_SPEEDUP", "3.0")),
         help="required map-chain fused-vs-per-op speedup in the baseline")
+    ap.add_argument("--min-shuffle-reduction", type=float, default=float(
+        os.environ.get("BENCH_MIN_SHUFFLE_REDUCTION", "3.0")),
+        help="required split-vs-unsplit shuffled-row reduction factor")
     args = ap.parse_args()
 
     errors: list[str] = []
     for name in GATES:
         check_bench(name, args.factor, errors)
     check_fusion_floor(args.min_speedup, errors)
+    check_aggregation_floor(args.min_shuffle_reduction, errors)
 
     if errors:
         print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)

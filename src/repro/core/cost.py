@@ -44,11 +44,31 @@ def _map_selectivity(op: MapOp) -> float:
     return 1.0
 
 
-def estimate(node: Node, memo: Optional[dict] = None) -> Stats:
-    """Recursive cardinality/size estimate for `node`'s output."""
+def has_combiner(node: Node) -> bool:
+    """Does this subtree contain a combiner Reduce?  Cached per instance
+    (same idiom as `Node.attrs`): decides whether an estimate depends on
+    `dop`, keeping the hot dop-independent memo keyed on the bare int id."""
+    h = node.__dict__.get("_hascomb")
+    if h is None:
+        h = (isinstance(node, ReduceOp) and node.combiner) \
+            or any(has_combiner(c) for c in node.children)
+        node.__dict__["_hascomb"] = h
+    return h
+
+
+def estimate(node: Node, memo: Optional[dict] = None, dop: int = 1) -> Stats:
+    """Recursive cardinality/size estimate for `node`'s output.
+
+    `dop` (degree of parallelism) only affects COMBINER Reduces: a combiner
+    runs per worker without co-locating keys first, so every worker may hold
+    (up to) every group — its global output is `min(rows, groups * dop)`
+    partial records, which is exactly what crosses the downstream shuffle.
+    Combiner-free subtrees (the common case) memoize on the plain
+    `struct_id`; only subtrees containing a combiner pay a per-dop key.
+    """
     if memo is None:
         memo = {}
-    key = struct_id(node)
+    key = (struct_id(node), dop) if has_combiner(node) else struct_id(node)
     if key in memo:
         return memo[key]
 
@@ -57,16 +77,18 @@ def estimate(node: Node, memo: Optional[dict] = None) -> Stats:
     if isinstance(node, Source):
         st = Stats(rows=float(node.num_records), width=width)
     elif isinstance(node, MapOp):
-        cin = estimate(node.child, memo)
+        cin = estimate(node.child, memo, dop)
         st = Stats(rows=cin.rows * _map_selectivity(node), width=width,
                    distinct=cin.distinct)
     elif isinstance(node, ReduceOp):
-        cin = estimate(node.child, memo)
+        cin = estimate(node.child, memo, dop)
         groups = float(node.hints.distinct_keys) if node.hints.distinct_keys \
             else max(1.0, cin.rows * DEFAULT_GROUPING_FACTOR)
         groups = min(groups, cin.rows) if cin.rows else groups
         ke = node.props.kat_emit
-        if ke in (KatEmit.PASSTHROUGH, None):
+        if node.combiner:
+            rows = min(cin.rows, groups * max(dop, 1))
+        elif ke in (KatEmit.PASSTHROUGH, None):
             rows = cin.rows
         elif ke is KatEmit.PASSTHROUGH_FILTER:
             gsel = node.hints.group_selectivity
@@ -80,7 +102,7 @@ def estimate(node: Node, memo: Optional[dict] = None) -> Stats:
             rows = groups
         st = Stats(rows=rows, width=width, distinct=groups)
     elif isinstance(node, MatchOp):
-        ls, rs = estimate(node.left, memo), estimate(node.right, memo)
+        ls, rs = estimate(node.left, memo, dop), estimate(node.right, memo, dop)
         if node.hints.join_fanout is not None:
             rows = ls.rows * node.hints.join_fanout
         elif node.hints.pk_side == "right":
@@ -95,11 +117,11 @@ def estimate(node: Node, memo: Optional[dict] = None) -> Stats:
         rows *= _map_selectivity_like(node)
         st = Stats(rows=rows, width=width)
     elif isinstance(node, CrossOp):
-        ls, rs = estimate(node.left, memo), estimate(node.right, memo)
+        ls, rs = estimate(node.left, memo, dop), estimate(node.right, memo, dop)
         st = Stats(rows=ls.rows * rs.rows * _map_selectivity_like(node),
                    width=width)
     elif isinstance(node, CoGroupOp):
-        ls, rs = estimate(node.left, memo), estimate(node.right, memo)
+        ls, rs = estimate(node.left, memo, dop), estimate(node.right, memo, dop)
         groups = float(node.hints.distinct_keys) if node.hints.distinct_keys \
             else max(1.0, max(ls.rows, rs.rows) * DEFAULT_GROUPING_FACTOR)
         st = Stats(rows=groups, width=width, distinct=groups)

@@ -51,6 +51,34 @@ from .record import RecordBatch
 _MIX = 0x9E3779B97F4A7C15  # Fibonacci hashing constant
 
 
+class ShuffleStats:
+    """Trace-time accounting of what crosses the repartition collectives.
+
+    `wire_rows` counts the buffer slots shipped through `all_to_all` per
+    plan execution (per-shard capacity × workers — the actual tensor rows on
+    the wire, masked slots included); `collectives` counts repartition sites.
+    Incremented while the shard_map body is traced, so a combiner plan —
+    whose pre-Reduce compacts to ~groups rows BEFORE the collective — shows
+    proportionally fewer wire rows than the unsplit plan
+    (benchmarks/bench_aggregation.py asserts the ratio)."""
+
+    def __init__(self):
+        self.wire_rows = 0
+        self.collectives = 0
+
+    def clear(self) -> None:
+        self.wire_rows = 0
+        self.collectives = 0
+
+
+_SHUFFLE_STATS = ShuffleStats()
+
+
+def shuffle_stats() -> ShuffleStats:
+    """Process-wide repartition accounting (cleared by the caller)."""
+    return _SHUFFLE_STATS
+
+
 def _hash_u64(x):
     x = (x ^ (x >> 30)) * np.uint64(0xBF58476D1CE4E5B9)
     x = (x ^ (x >> 27)) * np.uint64(0x94D049BB133111EB)
@@ -81,6 +109,8 @@ def _repartition(b: M.MaskedBatch, keys, axis: str, p: int) -> M.MaskedBatch:
     """Hash-partition rows by key over the `axis` workers (all_to_all)."""
     if p == 1:
         return b
+    _SHUFFLE_STATS.wire_rows += b.capacity * p
+    _SHUFFLE_STATS.collectives += 1
     tgt = (_key_hash_jnp(b.columns, keys, b.valid) % jnp.uint64(p)).astype(jnp.int32)
     slots = jnp.arange(p, dtype=jnp.int32)
     send_valid = b.valid[None, :] & (tgt[None, :] == slots[:, None])

@@ -31,9 +31,11 @@ from typing import Iterable, Optional
 from .operators import (CrossOp, MapOp, MatchOp, Node, ReduceOp, Source,
                         commute_id, intern_commute_key, replace_child,
                         struct_id)
-from .reorder import (commute, pull_unary_from_binary,
+from .reorder import (commute, pull_combiner_from_binary,
+                      pull_unary_from_binary, push_combiner_into_binary,
                       push_unary_into_binary, reorderable, rotate,
-                      rotate_guard, swap_unary, unary_reorderable)
+                      rotate_guard, split_reduce, swap_unary,
+                      unary_reorderable, unsplit_reduce)
 
 
 class PlanSpaceExceeded(RuntimeError):
@@ -134,12 +136,17 @@ class RewriteEngine:
 
     `orbit(tree)` re-materializes the orientation variants of one class
     (cheap clones, deduplicated by structural id) for callers that need
-    commuted plans as distinct objects (`include_commutes=True`)."""
+    commuted plans as distinct objects (`include_commutes=True`).
 
-    def __init__(self):
+    `split_reduces=True` (the default) additionally explores decomposable-
+    aggregation splits: `reduce → merge∘pre`, their inverses, and the eager
+    push of a combiner below a PK-FK Match."""
+
+    def __init__(self, split_reduces: bool = True):
         self._memo: dict[int, tuple[list[Node], list[int]]] = {}
         self._reps: dict[int, Node] = {}
         self._variants: dict[int, list[Node]] = {}
+        self._split = split_reduces
 
     def intern(self, node: Node) -> Node:
         return self._reps.setdefault(commute_id(node), node)
@@ -207,6 +214,14 @@ class RewriteEngine:
                 for side in (0, 1):
                     self._emit(trees, cids,
                                push_unary_into_binary(node, child, side))
+            if self._split and isinstance(node, ReduceOp):
+                self._emit(trees, cids, split_reduce(node))
+                self._emit(trees, cids, unsplit_reduce(node))
+                for side in (0, 1):
+                    self._emit(trees, cids,
+                               push_combiner_into_binary(node, side))
+                    self._emit(trees, cids,
+                               pull_combiner_from_binary(node, side))
         if node.is_binary:
             for side in (0, 1):
                 child = node.children[side]
@@ -295,7 +310,8 @@ class RewriteEngine:
 
 def closure(flow: Node, max_plans: int = 20000,
             engine: Optional[RewriteEngine] = None,
-            include_commutes: bool = True) -> Iterable[Node]:
+            include_commutes: bool = True,
+            split_reduces: bool = True) -> Iterable[Node]:
     """Lazily yield every flow reachable from `flow` by valid rewrites, in
     discovery order (depth-first over the class graph, `flow`'s class first;
     with `include_commutes=True` each class's orientation orbit is emitted
@@ -304,7 +320,7 @@ def closure(flow: Node, max_plans: int = 20000,
     The interleaved optimizer consumes this generator directly so costing
     overlaps enumeration.  Raises `PlanSpaceExceeded` when more than
     `max_plans` plans are yielded."""
-    engine = engine or RewriteEngine()
+    engine = engine or RewriteEngine(split_reduces=split_reduces)
     root = engine.intern(flow)
     seen = {commute_id(root)}
     count = 0
@@ -332,16 +348,20 @@ def closure(flow: Node, max_plans: int = 20000,
 
 def enumerate_plans(flow: Node, max_plans: int = 20000,
                     include_commutes: bool = True,
-                    engine: Optional[RewriteEngine] = None) -> list[Node]:
+                    engine: Optional[RewriteEngine] = None,
+                    split_reduces: bool = True) -> list[Node]:
     """All data flows reachable from `flow` by valid pairwise reorderings.
 
     `include_commutes=False` collapses Match/Cross argument order to one
     representative per side-order-insensitive class, matching the paper's
     notion of distinct operator orders.  (The search itself always runs
     class-wise; commuted variants are materialized only on request.)
+    `split_reduces=False` restricts the space to pure reorderings (no
+    combiner/merge splits of decomposable Reduces).
     """
     return list(closure(flow, max_plans=max_plans, engine=engine,
-                        include_commutes=include_commutes))
+                        include_commutes=include_commutes,
+                        split_reduces=split_reduces))
 
 
 def count_plans(flow: Node, **kw) -> int:

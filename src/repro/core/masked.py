@@ -132,8 +132,10 @@ def compact_to_estimate(b: "MaskedBatch", node: Node, stats_memo: dict,
     """Compact `b` to the bucketed capacity of `node`'s cardinality estimate
     (`estimate * slack * scale / shards`, floored at 8) — the single
     compaction policy shared by the per-op masked walk, the compiled
-    pipeline and the distributed per-shard body."""
-    est = estimate(node, stats_memo).rows / shards * slack * scale
+    pipeline and the distributed per-shard body.  `shards` doubles as the
+    estimator's degree of parallelism so a combiner's per-shard capacity
+    covers the worst case of every group present on every worker."""
+    est = estimate(node, stats_memo, dop=shards).rows / shards * slack * scale
     cap = int(min(b.capacity, max(bucket_capacity(est), 8)))
     return b.compact(cap) if cap < b.capacity else b
 

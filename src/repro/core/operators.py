@@ -83,7 +83,8 @@ def commute_id(node: "Node") -> int:
 
 
 # caches stored on instances that must not leak into structural clones
-_NODE_CACHE_KEYS = ("_sid", "_cid", "_attrs", "_effr", "_effw", "_pres")
+_NODE_CACHE_KEYS = ("_sid", "_cid", "_attrs", "_effr", "_effw", "_pres",
+                    "_hascomb")
 
 
 def shallow_clone(node: "Node") -> tuple["Node", dict]:
@@ -294,6 +295,11 @@ class ReduceOp(Node):
     child: Node
     hints: Hints = dataclasses.field(default_factory=Hints)
     add_dtypes: dict = dataclasses.field(default_factory=dict)
+    # True for the local pre-aggregation half of a split Reduce: its output
+    # is a sound PARTIAL aggregate on ANY partition of its input, so the
+    # physical layer may run it per worker with no repartition (the merge
+    # half above re-establishes the global grouping).
+    combiner: bool = False
     out_schema: Schema = None
 
     def __post_init__(self):

@@ -124,6 +124,16 @@ def _is_unary_flow(flow: Node) -> bool:
     return True
 
 
+def _has_splittable_reduce(flow: Node) -> bool:
+    """Does the closure explore combiner/merge splits for this flow?  The
+    group-lattice fast path only covers reorderings, so such flows must go
+    through the closure to keep `optimize == optimize_two_phase`."""
+    return any(isinstance(n, ReduceOp)
+               and (n.combiner or n.props.combine is not None
+                    or getattr(n.udf, "__combine_split__", None) is not None)
+               for n in flow.iter_nodes())
+
+
 class _UnaryGroupSearch:
     """Interleaved Algorithm-1 exploration + Volcano costing over op groups."""
 
@@ -178,7 +188,8 @@ class _UnaryGroupSearch:
 
     # -- interleaved costing ------------------------------------------------
     def _stats_key(self, node: Node) -> tuple:
-        st = estimate(node, self.stats_memo)
+        # same dop as _expand so the (struct_id, dop)-keyed memo is shared
+        st = estimate(node, self.stats_memo, self.ctx.dop)
         return (st.rows, st.width, st.distinct)
 
     def cands(self, flow: Node) -> dict:
@@ -251,7 +262,7 @@ def optimize(flow: Node, ctx: Optional[Ctx] = None, max_plans: int = 20000,
     `enumerate_plans` raise `PlanSpaceExceeded` past it); the group search
     never materializes orderings, so the cap does not apply there."""
     ctx = ctx or Ctx()
-    if prune and _is_unary_flow(flow):
+    if prune and _is_unary_flow(flow) and not _has_splittable_reduce(flow):
         n_ops = sum(1 for _ in flow.iter_nodes()) - 1
         # n_ops! bounds the ordering count, so small flows skip the lattice
         # construction that exact counting requires

@@ -239,7 +239,7 @@ def _expand(node: Node, ctx: Ctx, stats_memo: dict,
     Split out of `candidates` so group-level searches (the interleaved
     optimizer's unary fast path) can price an operator over an explicit
     sub-plan set instead of the per-subtree memo."""
-    st = estimate(node, stats_memo)
+    st = estimate(node, stats_memo, ctx.dop)
     out: list[PhysPlan] = []
 
     if isinstance(node, Source):
@@ -250,7 +250,7 @@ def _expand(node: Node, ctx: Ctx, stats_memo: dict,
                             node_cost=CostVec(mem=_t_mem(st.bytes, 0, ctx))))
 
     elif isinstance(node, MapOp):
-        cin = estimate(node.child, stats_memo)
+        cin = estimate(node.child, stats_memo, ctx.dop)
         for iprops, iplan in child_cands[0].items():
             cost = CostVec(
                 mem=_t_mem(cin.bytes, st.bytes, ctx),
@@ -259,8 +259,30 @@ def _expand(node: Node, ctx: Ctx, stats_memo: dict,
                                 local="scan", props=_preserved(iprops, node),
                                 node_cost=cost))
 
+    elif isinstance(node, ReduceOp) and node.combiner:
+        # Combiner (pre-aggregation) half of a split Reduce: sound on ANY
+        # partition of its input, so the only strategy is per-worker local
+        # aggregation with forward shipping — the merge above pays for the
+        # (now much smaller) repartition.  Input partitionings within the
+        # key survive: equal keys stay on one worker, so equal merge keys do.
+        cin = estimate(node.child, stats_memo, ctx.dop)
+        kset = frozenset(node.key)
+        for iprops, iplan in child_cands[0].items():
+            presorted = iprops.sorted_on(kset)
+            cpu = cin.rows * node.hints.cpu_flops_per_record
+            if not presorted:
+                cpu += sort_flops(cin.rows / ctx.dop) * ctx.dop
+            props = Props(partitions=frozenset(g for g in iprops.partitions
+                                               if g <= kset),
+                          sort=tuple(node.key))
+            cost = CostVec(mem=_t_mem(cin.bytes, st.bytes, ctx),
+                           cpu=_t_cpu(cpu, ctx))
+            out.append(PhysPlan(node=node, inputs=(iplan,), ship=("forward",),
+                                local="reuse-sort" if presorted else "sort",
+                                props=props, node_cost=cost))
+
     elif isinstance(node, ReduceOp):
-        cin = estimate(node.child, stats_memo)
+        cin = estimate(node.child, stats_memo, ctx.dop)
         kset = frozenset(node.key)
         for iprops, iplan in child_cands[0].items():
             options = []
@@ -285,8 +307,8 @@ def _expand(node: Node, ctx: Ctx, stats_memo: dict,
                                     local=local, props=props, node_cost=cost))
 
     elif isinstance(node, (MatchOp, CrossOp)):
-        ls = estimate(node.left, stats_memo)
-        rs = estimate(node.right, stats_memo)
+        ls = estimate(node.left, stats_memo, ctx.dop)
+        rs = estimate(node.right, stats_memo, ctx.dop)
         lcands, rcands = child_cands
         is_match = isinstance(node, MatchOp)
         lk = frozenset(node.left_key) if is_match else frozenset()
@@ -355,8 +377,8 @@ def _expand(node: Node, ctx: Ctx, stats_memo: dict,
                     props=_preserved(fprops, node), node_cost=cost))
 
     elif isinstance(node, CoGroupOp):
-        ls = estimate(node.left, stats_memo)
-        rs = estimate(node.right, stats_memo)
+        ls = estimate(node.left, stats_memo, ctx.dop)
+        rs = estimate(node.right, stats_memo, ctx.dop)
         lk, rk = frozenset(node.left_key), frozenset(node.right_key)
         for (lp, lplan), (rp, rplan) in itertools.product(
                 child_cands[0].items(), child_cands[1].items()):
@@ -428,24 +450,27 @@ def cost_lower_bound(node: Node, ctx: Ctx, stats_memo: dict,
     if hit is not None:
         return hit
 
-    st = estimate(node, stats_memo)
+    st = estimate(node, stats_memo, ctx.dop)
     if isinstance(node, Source):
         lb = _t_mem(st.bytes, 0, ctx)
     elif isinstance(node, MapOp):
-        cin = estimate(node.child, stats_memo)
+        cin = estimate(node.child, stats_memo, ctx.dop)
         lb = cost_lower_bound(node.child, ctx, stats_memo, bound_memo) \
             + _t_mem(cin.bytes, st.bytes, ctx) \
             + _t_cpu(cin.rows * node.hints.cpu_flops_per_record, ctx)
     elif isinstance(node, ReduceOp):
-        cin = estimate(node.child, stats_memo)
-        net = 0.0 if _can_partition(node.child, bound_memo.setdefault(
-            "_parts", {})) else _t_shuffle(cin.bytes, ctx)
+        cin = estimate(node.child, stats_memo, ctx.dop)
+        # a combiner ships nothing in EVERY physical alternative, so charging
+        # it any network term would make the bound inadmissible
+        net = 0.0 if node.combiner or _can_partition(
+            node.child, bound_memo.setdefault("_parts", {})) \
+            else _t_shuffle(cin.bytes, ctx)
         lb = cost_lower_bound(node.child, ctx, stats_memo, bound_memo) \
             + net + _t_mem(cin.bytes, st.bytes, ctx) \
             + _t_cpu(cin.rows * node.hints.cpu_flops_per_record, ctx)
     elif isinstance(node, (MatchOp, CrossOp, CoGroupOp)):
-        ls = estimate(node.children[0], stats_memo)
-        rs = estimate(node.children[1], stats_memo)
+        ls = estimate(node.children[0], stats_memo, ctx.dop)
+        rs = estimate(node.children[1], stats_memo, ctx.dop)
         parts = bound_memo.setdefault("_parts", {})
         net = 0.0
         if isinstance(node, CrossOp):

@@ -58,7 +58,7 @@ from .record import RecordBatch
 # Semantic flow fingerprint (the executable-cache identity)
 #
 # `struct_id`/`commute_id` intern on operator NAMES only — fine inside one
-# enumeration run (DESIGN.md §6.3) but unsafe as a process-wide cache key:
+# enumeration run (DESIGN.md §7.3) but unsafe as a process-wide cache key:
 # two same-named operators with different UDFs, keys or hints would collide.
 # `semantic_key` fingerprints by value instead: UDF code objects (unwrapping
 # the `commute` swap wrapper), keys, hints and source cardinalities, with
@@ -154,7 +154,12 @@ def semantic_key(node: Node, _memo: Optional[dict] = None) -> tuple:
                _hints_fingerprint(node.hints, None),
                semantic_key(node.child, _memo))
     elif isinstance(node, ReduceOp):
+        # `combiner` changes execution semantics (partial aggregation) and
+        # `props.combine` changes the plan space a flow compiles from — two
+        # Reduces identical in code but differing ONLY in decomposability
+        # (e.g. via manual props) must not share an executable.
         out = ("reduce", node.name, _udf_fingerprint(node.udf), node.key,
+               node.combiner, node.props.combine,
                _hints_fingerprint(node.hints, None),
                semantic_key(node.child, _memo))
     elif isinstance(node, (MatchOp, CrossOp, CoGroupOp)):

@@ -203,9 +203,15 @@ def _push_conditions(u: Node, b: Node, side: int) -> bool:
 
     if isinstance(u, MapOp):
         if isinstance(b, CoGroupOp):
-            # CoGroup ≡ Reduce over tagged union: Theorem 2 applies — the Map
-            # must preserve key groups of the CoGroup key on its side.
-            return kgp(u, _side_key(b, side))
+            # CoGroup ≡ Reduce over tagged union: Theorem 2 would push the
+            # Map into BOTH branches of the union.  A single-side push is
+            # sound only for strict one-to-one maps (|f(r)| = 1): a filter
+            # dropping whole groups on this side is NOT equivalent, because
+            # the other side still creates those groups on the union key
+            # domain (group-filter semantics differ above vs below); record
+            # duplication likewise changes per-group aggregates.  Key writes
+            # are already excluded by ROC (the CoGroup reads its keys).
+            return u.props.card is Card.ONE and kgp(u, _side_key(b, side))
         if isinstance(b, (MatchOp, CrossOp)):
             return True  # RAT: Theorem 1 + Theorem 3 suffice
         return False
@@ -229,12 +235,14 @@ def _push_conditions(u: Node, b: Node, side: int) -> bool:
     return False
 
 
-def _extend_reduce(u: ReduceOp, extra: frozenset) -> ReduceOp:
+def _extend_reduce(u: ReduceOp, extra: frozenset,
+                   child: Node) -> ReduceOp:
     """Non-intrusive UDF extension (paper Sec. 4.3.2 invariant grouping):
     wrap the Reduce UDF so per-group emissions additionally pass through the
-    `extra` attributes as group-firsts.  Sound ONLY when every attribute in
-    `extra` is group-constant — the caller guarantees this via the PK-join
-    guard.  The wrapper records the original so a later push-down unwraps."""
+    `extra` attributes as group-firsts, re-rooted over `child` (whose schema
+    must supply `extra`).  Sound ONLY when every attribute in `extra` is
+    group-constant — the caller guarantees this via the PK-join guard.  The
+    wrapper records the original so a later push-down unwraps."""
     orig_udf, orig_props = u.udf, u.props
     extra = frozenset(extra)
 
@@ -253,12 +261,18 @@ def _extend_reduce(u: ReduceOp, extra: frozenset) -> ReduceOp:
 
     extended.__name__ = getattr(orig_udf, "__name__", "udf") + "_ext"
     extended.__reduce_extension__ = (orig_udf, orig_props, extra)
+    # The pass-through READS `extra` (group-firsts), unlike a true identity
+    # copy: without this, a later swap could lift the extended Reduce above
+    # the very operator that creates one of these fields (attrs match again
+    # at the root, so `_valid` alone cannot catch it) and crash at runtime.
     props = dataclasses.replace(
         orig_props,
+        reads=orig_props.reads | extra,
         writes=orig_props.writes - extra,
         drops=orig_props.drops - extra,
         copies=orig_props.copies | extra)
-    return dataclasses.replace(u, udf=extended, props=props, out_schema=None)
+    return dataclasses.replace(u, udf=extended, props=props, child=child,
+                               out_schema=None)
 
 
 def _strip_reduce_extension(u: ReduceOp, other_attrs: frozenset):
@@ -312,9 +326,182 @@ def pull_unary_from_binary(b: Node, side: int) -> Optional[Node]:
         extra = missing & other_attrs
         if extra and u.props.kat_emit is not None \
                 and u.props.kat_emit.name.startswith("PER_GROUP"):
-            u = _extend_reduce(u, extra)
+            try:
+                return _valid(_extend_reduce(u, extra, new_b), like=b)
+            except (ValueError, KeyError):
+                return None
     try:
         return _valid(u.with_children(new_b), like=b)
+    except (ValueError, KeyError):
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Decomposable-aggregation splitting (combiner + merge) and eager push-down
+# ---------------------------------------------------------------------------
+def _combiner_node(name: str, orig_udf, recipe, key: tuple, reads: frozenset,
+                   child: Node, hints, source: str) -> Optional[ReduceOp]:
+    """A combiner ReduceOp for `orig_udf`/`recipe` over `child`'s schema, or
+    None when the UDF's reads / keys / partial names don't fit that schema."""
+    from .sca import decompose as D
+
+    key_set = frozenset(key)
+    attrs = child.attrs()
+    if not key_set <= attrs or not frozenset(reads) <= attrs | key_set:
+        return None
+    partials = recipe.partial_fields(D.PARTIAL_PREFIX)
+    if set(partials) & attrs:
+        return None  # partial-column name collision with a live attribute
+    try:
+        pdt = D.partial_dtypes(orig_udf, recipe, child.out_schema, key)
+    except Exception:
+        return None
+    props = UdfProperties(
+        reads=frozenset(reads) | key_set,
+        writes=frozenset(partials) | (attrs - key_set),
+        adds=frozenset(partials),
+        drops=attrs - key_set,
+        implicit_copy=False, card=Card.MANY, filter_fields=frozenset(),
+        kat_emit=KatEmit.PER_GROUP, copies=key_set, source=source)
+    try:
+        return ReduceOp(name=name, udf=D.make_pre_udf(orig_udf, recipe),
+                        key=key, props=props, child=child, hints=hints,
+                        add_dtypes=pdt, combiner=True)
+    except (ValueError, KeyError):
+        return None
+
+
+def split_reduce(r: Node) -> Optional[Node]:
+    """`reduce(X)` → `merge(pre(X))` for a decomposable Reduce.
+
+    Sound for ANY executor as a purely logical rewrite: run globally, `pre`
+    emits one partial per group and `merge` re-aggregates singletons (sum of
+    one sum, min of one min, ...).  The payoff is physical: a combiner may
+    run per worker BEFORE the repartition, so only `min(rows, groups·p)`
+    narrow partial records cross the shuffle instead of the full input."""
+    if not isinstance(r, ReduceOp) or r.combiner \
+            or getattr(r.udf, "__combine_merge__", None) is not None:
+        return None
+    recipe = r.props.combine
+    if recipe is None or r.props.schema_dependent:
+        return None
+    from .sca import decompose as D
+
+    pre = _combiner_node(r.name + ".pre", r.udf, recipe, r.key,
+                         r.props.reads, r.child, r.hints, r.props.source)
+    if pre is None:
+        return None
+    key_set = frozenset(r.key)
+    out_fields = r.out_schema.fields
+    merge_in = frozenset(pre.out_schema.fields)
+    madds = frozenset(out_fields) - merge_in
+    merge_props = UdfProperties(
+        reads=merge_in | key_set,
+        writes=madds | (merge_in - frozenset(out_fields)),
+        adds=madds,
+        drops=merge_in - frozenset(out_fields),
+        implicit_copy=False, card=Card.MANY, filter_fields=frozenset(),
+        kat_emit=KatEmit.PER_GROUP, copies=key_set & frozenset(out_fields),
+        source=r.props.source)
+    merge_udf = D.make_merge_udf(r.udf, recipe, r.child.out_schema.fields,
+                                 r.child.out_schema.dtypes)
+    merge_udf.__combine_split__ = (r.name, r.udf, r.props, r.hints,
+                                   r.add_dtypes)
+    try:
+        merge = ReduceOp(
+            name=r.name + ".merge", udf=merge_udf, key=r.key,
+            props=merge_props, child=pre, hints=r.hints,
+            add_dtypes={f: r.out_schema.dtypes[f] for f in madds})
+    except (ValueError, KeyError):
+        return None
+    # the split must reproduce the original output schema exactly
+    if tuple(merge.out_schema.fields) != tuple(out_fields) or any(
+            merge.out_schema.dtypes[f] != r.out_schema.dtypes[f]
+            for f in out_fields):
+        return None
+    return merge
+
+
+def unsplit_reduce(m: Node) -> Optional[Node]:
+    """`merge(pre(X))` → `reduce(X)` — inverse of `split_reduce`."""
+    if not isinstance(m, ReduceOp):
+        return None
+    info = getattr(m.udf, "__combine_split__", None)
+    if info is None:
+        return None
+    pre = m.child
+    if not (isinstance(pre, ReduceOp) and pre.combiner
+            and pre.key == m.key):
+        return None
+    name, udf, props, hints, add_dtypes = info
+    try:
+        return _valid(ReduceOp(name=name, udf=udf, key=m.key, props=props,
+                               child=pre.child, hints=hints,
+                               add_dtypes=add_dtypes), like=m)
+    except (ValueError, KeyError):
+        return None
+
+
+def push_combiner_into_binary(m: Node, side: int) -> Optional[Node]:
+    """Eager aggregation (Sec. 4.3.2 extended): `merge(pre(b(L, R)))` →
+    `merge(b(pre(L), R))` when `b` is a PK-FK Match whose `side` carries the
+    FK and the combiner only references that side.
+
+    Safety: the combiner's key contains the match key of its side, so every
+    key group joins with exactly the one PK record (or is dropped whole) —
+    group membership and any group-constant join filter commute with the
+    partial aggregation, and the merge above projects the PK side's
+    attributes away again (its output schema is invariant)."""
+    if not isinstance(m, ReduceOp) \
+            or getattr(m.udf, "__combine_split__", None) is None:
+        return None
+    pre = m.child
+    if not (isinstance(pre, ReduceOp) and pre.combiner):
+        return None
+    b = pre.child
+    if not isinstance(b, MatchOp):
+        return None
+    orig_udf, recipe = pre.udf.__combine_pre__
+    pre2 = _combiner_node(pre.name, orig_udf, recipe, pre.key,
+                          pre.props.reads - frozenset(pre.key),
+                          b.children[side], pre.hints, pre.props.source)
+    if pre2 is None or not _push_conditions(pre2, b, side):
+        return None
+    kids = list(b.children)
+    kids[side] = pre2
+    try:
+        return _valid(m.with_children(b.with_children(*kids)), like=m)
+    except (ValueError, KeyError):
+        return None
+
+
+def pull_combiner_from_binary(m: Node, side: int) -> Optional[Node]:
+    """`merge(b(pre(L), R))` → `merge(pre(b(L, R)))` — inverse push."""
+    if not isinstance(m, ReduceOp) \
+            or getattr(m.udf, "__combine_split__", None) is None:
+        return None
+    b = m.child
+    if not isinstance(b, MatchOp):
+        return None
+    pre = b.children[side]
+    if not (isinstance(pre, ReduceOp) and pre.combiner and pre.key == m.key):
+        return None
+    kids = list(b.children)
+    kids[side] = pre.child
+    try:
+        new_b = b.with_children(*kids)
+    except (ValueError, KeyError):
+        return None
+    if not _push_conditions(pre, new_b, side):
+        return None
+    orig_udf, recipe = pre.udf.__combine_pre__
+    pre2 = _combiner_node(pre.name, orig_udf, recipe, pre.key,
+                          pre.props.reads - frozenset(pre.key),
+                          new_b, pre.hints, pre.props.source)
+    if pre2 is None:
+        return None
+    try:
+        return _valid(m.with_children(pre2), like=m)
     except (ValueError, KeyError):
         return None
 
@@ -424,7 +611,7 @@ def reorderable(r: Node, s: Node) -> bool:
 # ---------------------------------------------------------------------------
 # All single-step rewrites of a tree (used by the closure enumerator)
 # ---------------------------------------------------------------------------
-def local_rewrites(node: Node) -> list[Node]:
+def local_rewrites(node: Node, split_reduces: bool = True) -> list[Node]:
     """Every tree reachable from `node` by ONE valid rewrite at the root."""
     out: list[Node] = []
     if _is_unary_op(node):
@@ -438,6 +625,15 @@ def local_rewrites(node: Node) -> list[Node]:
                 t = push_unary_into_binary(node, child, side)
                 if t is not None:
                     out.append(t)
+        if split_reduces and isinstance(node, ReduceOp):
+            for t in (split_reduce(node), unsplit_reduce(node)):
+                if t is not None:
+                    out.append(t)
+            for side in (0, 1):
+                for t in (push_combiner_into_binary(node, side),
+                          pull_combiner_from_binary(node, side)):
+                    if t is not None:
+                        out.append(t)
     if _is_binary_op(node):
         for side in (0, 1):
             if _is_unary_op(node.children[side]):

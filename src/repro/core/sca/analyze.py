@@ -89,11 +89,15 @@ def analyze_udf(udf, kind: str, in_schemas: Sequence[Schema],
             else:
                 raise ValueError(f"unknown udf kind {kind!r}")
             # schema reflection is invisible to tracing; OR-in the cheap
-            # bytecode check so schema-changing rewrites stay blocked
+            # bytecode check so schema-changing rewrites stay blocked.  A
+            # schema-reflecting UDF must also lose any combine recipe: the
+            # merge replay presents the ORIGINAL field list, which a
+            # rewritten plan may have changed under it.
             if _bc.is_schema_dependent(udf):
                 import dataclasses
 
-                p = dataclasses.replace(p, schema_dependent=True)
+                p = dataclasses.replace(p, schema_dependent=True,
+                                        combine=None)
             return p
         except Exception:
             if mode == "jaxpr":
@@ -108,6 +112,13 @@ def analyze_udf(udf, kind: str, in_schemas: Sequence[Schema],
     kat = kind in ("reduce", "cogroup")
     keys = tuple(key) + tuple(left_key) + tuple(right_key)
     props = _bc.analyze(udf, in_fields, kat=kat, key_fields=keys)
+    if kind == "reduce" and props.combine is not None:
+        # the static claim is only a candidate: re-derive the recipe from the
+        # eager probe and keep it only if differential verification passes
+        from . import decompose
+
+        props = dataclasses.replace(
+            props, combine=decompose.detect(udf, in_schemas[0], key, props))
     if kind == "match":
         # Match keys join the conceptual f' read set (Sec. 4.3.1)
         props = dataclasses.replace(

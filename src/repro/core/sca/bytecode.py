@@ -27,9 +27,13 @@ from __future__ import annotations
 import dis
 from typing import Optional, Sequence
 
-from ..udf import Card, KatEmit, UdfProperties
+from ..udf import Card, CombineRecipe, KatEmit, UdfProperties
 
 _READ_METHODS = {"get", "sum", "max", "min", "mean"}
+_AGG_METHODS = ("sum", "max", "min", "mean", "count")  # decomposable kinds
+# methods whose semantics do not compose across partitions of a group
+_NONDECOMPOSABLE_METHODS = {"any", "all", "broadcast", "first", "first_of",
+                            "record_builder", "copy", "concat"}
 _GROUP_READ_METHODS = {"any", "all", "broadcast", "count"}
 _COPY_METHODS = {"copy", "concat", "first", "record_builder"}
 _PROJ_METHODS = {"keys"}  # implicit projection to the key fields
@@ -53,6 +57,9 @@ class _Analysis:
         self.explicit_copies: set = set()
         self.uses_first = False
         self.schema_dependent = False
+        self.agg_sites: list = []        # decomposable agg kinds, call order
+        self.agg_set_cols: dict = {}     # set-name -> agg kind (adjacency)
+        self.nondecomposable = False     # any method outside the agg kinds
 
 
 def _next_const_str(instrs, i) -> Optional[str]:
@@ -79,6 +86,10 @@ def _scan(code) -> _Analysis:
             meth = ins.argval
             if meth == "fields":
                 a.schema_dependent = True
+            if meth in _AGG_METHODS:
+                a.agg_sites.append(meth)
+            if meth in _NONDECOMPOSABLE_METHODS:
+                a.nondecomposable = True
             if meth in _READ_METHODS:
                 name = _next_const_str(instrs, i)
                 if name is None:
@@ -101,6 +112,14 @@ def _scan(code) -> _Analysis:
                         "bytecode SCA: dynamic field name in set(); field names "
                         "must be static constants (paper Sec. 5 assumption)")
                 a.set_names.add(name)
+                # decomposable-agg adjacency: set("f", g.<agg>(...)) — the
+                # first method load after the name decides the column's kind
+                for j in range(i + 1, min(i + 4, len(instrs))):
+                    nj = instrs[j]
+                    if nj.opname in ("LOAD_ATTR", "LOAD_METHOD"):
+                        if nj.argval in _AGG_METHODS:
+                            a.agg_set_cols[name] = nj.argval
+                        break
                 # explicit-copy pattern: set("f", <view>.get("f")) with the
                 # value UNMODIFIED — the get's CALL must feed the 2-arg set
                 # CALL directly (any op in between means a modification).
@@ -192,12 +211,25 @@ def analyze(udf, in_fields: Sequence[str], kat: bool = False,
 
     filter_fields = frozenset(reads) if (any_where or a.has_branch) else frozenset()
 
+    # Decomposability CANDIDATE (safety through conservatism): claimed only
+    # for straight-line, keys()-projecting, single per-group emissions whose
+    # only record access beyond get() goes through decomposable aggregates.
+    # `analyze_udf` verifies the candidate differentially before the recipe
+    # may enable the split-Reduce rewrite — the static claim alone never does.
+    combine = None
+    if kat and kat_emit is KatEmit.PER_GROUP and not a.nondecomposable \
+            and not a.has_loop and not a.has_branch and not a.schema_dependent \
+            and not a.unresolved_get and a.implicit_projection:
+        cols = tuple((k, "key") for k in key_fields) + tuple(
+            (n, a.agg_set_cols.get(n, "expr")) for n in sorted(a.set_names))
+        combine = CombineRecipe(sites=tuple(a.agg_sites), columns=cols)
+
     return UdfProperties(
         reads=frozenset(reads), writes=frozenset(writes), adds=frozenset(adds),
         drops=frozenset(a.drops), implicit_copy=implicit_copy, card=card,
         filter_fields=filter_fields, kat_emit=kat_emit,
         copies=frozenset(a.explicit_copies & in_set), source="bytecode-sca",
-        schema_dependent=a.schema_dependent)
+        schema_dependent=a.schema_dependent, combine=combine)
 
 
 def is_schema_dependent(udf) -> bool:

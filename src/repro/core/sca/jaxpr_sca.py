@@ -249,7 +249,17 @@ def analyze_reduce(udf, in_schema, key: Sequence[str]) -> UdfProperties:
         return invoke.run_kat_udf(udf, dict(zip(fields, arrs)), segops, key)
 
     tr = _trace(runner, fields, arrays)
-    return _properties_from_trace(tr, fields, kat=True, key_fields=key)
+    props = _properties_from_trace(tr, fields, kat=True, key_fields=key)
+    # Decomposability (aggregation splitting): probe the UDF's aggregate call
+    # sites and verify the split differentially before recording the recipe.
+    from . import decompose
+
+    recipe = decompose.detect(udf, in_schema, key, props)
+    if recipe is not None:
+        import dataclasses
+
+        props = dataclasses.replace(props, combine=recipe)
+    return props
 
 
 def analyze_pair(udf, left_schema, right_schema,

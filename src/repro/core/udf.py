@@ -49,6 +49,51 @@ class KatEmit(enum.Enum):
     MANY = "many"
 
 
+# ---------------------------------------------------------------------------
+# Decomposable aggregation (SOFA-style aggregation splitting)
+# ---------------------------------------------------------------------------
+# Aggregate kinds whose per-group results compose across a partition of the
+# group's records: kind(kind(part_1), ..., kind(part_k)) == kind(whole) for
+# sum/min/max, count via sum-of-counts, and mean via the sum+count rewrite.
+DECOMPOSABLE_AGGS = ("sum", "min", "max", "count", "mean")
+
+
+@dataclasses.dataclass(frozen=True)
+class CombineRecipe:
+    """How to split a PER_GROUP Reduce UDF into a local pre-aggregation
+    (combiner) plus a final merge.
+
+    `sites` lists the UDF's GroupView aggregate call sites in (deterministic)
+    call order — one of `DECOMPOSABLE_AGGS` each.  The combiner re-runs the
+    UDF per partition, capturing each site's partial value(s) as extra
+    columns (`partial_fields`); the merge re-runs the UDF with every site
+    answered by merge-reducing those partials instead of touching records.
+    `columns` maps each emitted output column to how it is rebuilt at merge
+    time: 'key' (group-constant key attribute), one of the aggregate kinds
+    (the column IS site i's untouched result), or 'expr' (an arithmetic
+    composition of aggregate results, replayed by re-running the UDF).
+
+    A recipe is only attached to `UdfProperties.combine` after the split has
+    been verified against an eager differential run (sca.decompose.verify) —
+    analyzers may propose, the eager run disposes.
+    """
+
+    sites: tuple = ()        # aggregate kind per call site, in call order
+    columns: tuple = ()      # (output_field, 'key'|kind|'expr') pairs
+
+    def partial_fields(self, prefix: str = "_pt") -> tuple:
+        """Names of the partial columns the combiner emits, site-ordered.
+        `mean` decomposes into two partials (sum + count)."""
+        out = []
+        for i, kind in enumerate(self.sites):
+            if kind == "mean":
+                out.append(f"{prefix}{i}s")
+                out.append(f"{prefix}{i}c")
+            else:
+                out.append(f"{prefix}{i}")
+        return tuple(out)
+
+
 @dataclasses.dataclass(frozen=True)
 class UdfProperties:
     """The handful of properties the optimizer needs (Defs. 2-5)."""
@@ -71,6 +116,10 @@ class UdfProperties:
     # first()/record_builder() are safe built-ins (group-constant/identity
     # extension semantics) and do NOT set this flag.
     schema_dependent: bool = False
+    # Set (by the SCA analyzers, after eager verification) when the KAT UDF's
+    # emissions are built only from decomposable per-group aggregates, so a
+    # Reduce over it may be split into combiner + merge (reorder.split_reduce).
+    combine: Optional[CombineRecipe] = None
 
     def satisfies_kgp(self, key_fields: frozenset) -> bool:
         """Key Group Preservation (Def. 5) w.r.t. `key_fields`.

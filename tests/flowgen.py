@@ -1,0 +1,248 @@
+"""Seeded generator of random well-typed PACT flows + differential harness.
+
+`random_flow(seed)` builds a random flow over the record API — Map
+(modify/filter/add), Reduce (decomposable aggregation AND passthrough
+filters), Match (PK and general equi-joins), Cross, CoGroup — over random
+integer schemas, with UDFs generated as closures so the SCA analyzers derive
+every property from the black box alone.  All columns are int64 (aggregate
+means divide exactly-equal integer sums), so every plan in the rewrite
+closure — including split Reduces — must be BIT-identical to the
+unoptimized eager execution, which `assert_closure_identical` checks via
+`sorted_tuples()` multiset equality (no tolerance).
+
+The generator is deliberately constructive (ops only reference live fields)
+so every seed yields a valid flow; it is driven by `numpy.random.default_rng`
+and needs no optional dependencies, making the differential harness part of
+tier-1.  Property-based tests can still layer hypothesis on top by drawing
+the seed from a strategy.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import executor, flow as F
+from repro.core.enumeration import enumerate_plans
+from repro.core.operators import Hints
+from repro.core.record import Schema, batch_from_dict
+
+KEY_DOMAIN = 6  # join/group key values in [0, KEY_DOMAIN)
+
+
+class _Gen:
+    def __init__(self, seed: int, max_ops: int = 5):
+        self.rng = np.random.default_rng(seed)
+        self.max_ops = max_ops
+        self.fresh = 0          # unique-name counter (fields + sources)
+        self.sources: list = []  # (name, schema, is_key_unique)
+
+    # -- naming ---------------------------------------------------------------
+    def _name(self, prefix: str) -> str:
+        self.fresh += 1
+        return f"{prefix}{self.fresh}"
+
+    # -- sources --------------------------------------------------------------
+    def _new_source(self, n_fields: int, rows: int, unique_key: bool):
+        name = self._name("S")
+        fields = {self._name("k"): np.int64}  # field 0 is the key column
+        for _ in range(n_fields - 1):
+            fields[self._name("f")] = np.int64
+        schema = Schema.of(**fields)
+        self.sources.append((name, schema, unique_key, rows))
+        return F.source(name, schema, num_records=rows * 25)
+
+    # -- UDF factories (closures: the analyzers see only the black box) ------
+    def _map_modify(self, schema):
+        live = list(schema.fields)
+        target = live[self.rng.integers(len(live))]
+        reads = [live[i] for i in self.rng.choice(
+            len(live), size=min(len(live), int(self.rng.integers(1, 3))),
+            replace=False)]
+        mult = int(self.rng.integers(1, 4))
+        off = int(self.rng.integers(-3, 4))
+
+        def udf(ir, out):
+            val = ir.get(target) * 0
+            for r in reads:
+                val = val + ir.get(r)
+            out.emit(ir.copy().set(target, val * mult + off))
+
+        udf.__name__ = f"mod_{target}"
+        return udf
+
+    def _map_filter(self, schema):
+        live = list(schema.fields)
+        reads = [live[i] for i in self.rng.choice(
+            len(live), size=min(len(live), int(self.rng.integers(1, 3))),
+            replace=False)]
+        mod = int(self.rng.integers(2, 4))
+        keep = int(self.rng.integers(0, mod))
+
+        def udf(ir, out):
+            val = ir.get(reads[0]) * 0
+            for r in reads:
+                val = val + ir.get(r)
+            out.emit(ir.copy(), where=(val % mod) == keep)
+
+        udf.__name__ = "filt_" + "_".join(reads)
+        return udf
+
+    def _map_add(self, schema):
+        live = list(schema.fields)
+        reads = [live[i] for i in self.rng.choice(
+            len(live), size=min(len(live), int(self.rng.integers(1, 3))),
+            replace=False)]
+        new = self._name("g")
+
+        def udf(ir, out):
+            val = ir.get(reads[0]) * 0
+            for r in reads:
+                val = val + ir.get(r)
+            out.emit(ir.copy().set(new, val * 2 + 1))
+
+        udf.__name__ = f"add_{new}"
+        return udf
+
+    def _reduce_agg(self, schema, key):
+        """Decomposable aggregation: keys + a random mix of aggregates."""
+        live = [f for f in schema.fields]
+        a = live[self.rng.integers(len(live))]
+        b = live[self.rng.integers(len(live))]
+        o1, o2, o3 = self._name("a"), self._name("a"), self._name("a")
+        kind = int(self.rng.integers(0, 3))
+
+        if kind == 0:  # plain aggregates of input columns
+            def udf(g, out):
+                out.emit(g.keys().set(o1, g.sum(a)).set(o2, g.max(b))
+                         .set(o3, g.count()))
+        elif kind == 1:  # aggregate of a derived per-record expression
+            def udf(g, out):
+                out.emit(g.keys()
+                         .set(o1, g.sum(g.get(a) * 2 + g.get(b)))
+                         .set(o2, g.min(b)))
+        else:  # arithmetic ON aggregates (range + exact integer mean)
+            def udf(g, out):
+                out.emit(g.keys().set(o1, g.max(a) - g.min(a))
+                         .set(o2, g.mean(b)))
+
+        udf.__name__ = f"agg_{o1}"
+        return udf
+
+    def _reduce_passthrough(self, schema, key):
+        live = list(schema.fields)
+        a = live[self.rng.integers(len(live))]
+        thr = int(self.rng.integers(-2, 3))
+
+        def udf(g, out):
+            out.emit_records(where=g.any(g.get(a) > thr))
+
+        udf.__name__ = f"keep_{a}"
+        return udf
+
+    def _cogroup_udf(self, lschema, rschema):
+        a = list(lschema.fields)[self.rng.integers(len(lschema.fields))]
+        b = list(rschema.fields)[self.rng.integers(len(rschema.fields))]
+        o1, o2 = self._name("a"), self._name("a")
+
+        def udf(gl, gr, out):
+            out.emit(gl.keys().set(o1, gl.sum(a) + gr.sum(b))
+                     .set(o2, gl.count() - gr.count()))
+
+        udf.__name__ = f"cg_{o1}"
+        return udf
+
+    # -- flow assembly --------------------------------------------------------
+    def build(self):
+        node = self._new_source(int(self.rng.integers(2, 4)),
+                                rows=int(self.rng.integers(24, 40)),
+                                unique_key=False)
+        n_ops = int(self.rng.integers(2, self.max_ops + 1))
+        for _ in range(n_ops):
+            schema = node.out_schema
+            choice = self.rng.random()
+            if choice < 0.22:
+                node = F.map_(node, self._map_modify(schema))
+            elif choice < 0.40:
+                node = F.map_(node, self._map_filter(schema))
+            elif choice < 0.52:
+                node = F.map_(node, self._map_add(schema))
+            elif choice < 0.70:
+                key = [schema.fields[self.rng.integers(len(schema.fields))]]
+                if self.rng.random() < 0.6:
+                    udf = self._reduce_agg(schema, key)
+                else:
+                    udf = self._reduce_passthrough(schema, key)
+                node = F.reduce_(node, key, udf,
+                                 hints=Hints(distinct_keys=KEY_DOMAIN))
+            elif choice < 0.86:  # join a fresh dimension source
+                right = self._new_source(2, rows=KEY_DOMAIN, unique_key=True)
+                lk = schema.fields[self.rng.integers(len(schema.fields))]
+                rk = right.out_schema.fields[0]
+                hints = Hints(pk_side="right") if self.rng.random() < 0.7 \
+                    else Hints()
+                node = F.match(node, right, [lk], [rk], hints=hints)
+            elif choice < 0.94:  # cross with a single-record source
+                right = self._new_source(2, rows=1, unique_key=False)
+                node = F.cross(node, right)
+            else:  # cogroup with a fresh source on the key columns
+                right = self._new_source(2, rows=int(self.rng.integers(8, 16)),
+                                         unique_key=False)
+                lk = schema.fields[0]
+                rk = right.out_schema.fields[0]
+                node = F.cogroup(node, right, [lk], [rk],
+                                 self._cogroup_udf(schema, right.out_schema))
+        return node
+
+    def bindings(self, seed: int) -> dict:
+        rng = np.random.default_rng(seed)
+        out = {}
+        for name, schema, unique_key, rows in self.sources:
+            cols = {}
+            for i, f in enumerate(schema.fields):
+                if i == 0 and unique_key:
+                    cols[f] = np.arange(KEY_DOMAIN, dtype=np.int64)
+                elif i == 0:
+                    cols[f] = rng.integers(0, KEY_DOMAIN, rows)
+                else:
+                    cols[f] = rng.integers(-5, 9, rows if not unique_key
+                                           else KEY_DOMAIN)
+            out[name] = batch_from_dict(cols)
+        return out
+
+
+def random_flow(seed: int, max_ops: int = 5):
+    """(flow_root, make_bindings(seed) -> dict) for one generator seed."""
+    g = _Gen(seed, max_ops=max_ops)
+    root = g.build()
+    return root, g.bindings
+
+
+def canonical_rows(batch) -> list:
+    """Valid rows as a sorted list of tuples with fields aligned BY NAME
+    (schema field order is not semantic — rotations reorder columns), values
+    bit-exact (no tolerance)."""
+    b = batch.to_numpy().compact()
+    fields = sorted(b.fields)
+    rows = list(zip(*[np.asarray(b.columns[f]).tolist() for f in fields]))
+    return sorted(rows, key=lambda t: tuple(repr(x) for x in t))
+
+
+def assert_closure_identical(root, bindings: dict, max_plans: int = 600):
+    """Every plan in the rewrite closure — splits included — must be
+    BIT-identical (multiset of rows, no tolerance) to the unoptimized eager
+    execution.  Returns the number of plans checked and how many were split."""
+    ref_batch = executor.execute(root, bindings)
+    ref = canonical_rows(ref_batch)
+    plans = enumerate_plans(root, max_plans=max_plans)
+    assert any(p.canonical() == root.canonical() for p in plans)
+    n_split = 0
+    for p in plans:
+        if ".pre" in p.canonical():
+            n_split += 1
+        got_batch = executor.execute(p, bindings)
+        assert set(got_batch.fields) == set(ref_batch.fields)
+        got = canonical_rows(got_batch)
+        assert got == ref, (
+            "rewritten plan diverges from the eager reference:\n"
+            + p.pretty() + "\nvs original\n" + root.pretty())
+    return len(plans), n_split

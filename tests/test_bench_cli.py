@@ -1,0 +1,53 @@
+"""benchmarks/run.py CLI: --list output and clean --only validation."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+EXPECTED_BENCHES = {"q7", "q15", "textmining", "clickstream", "sca",
+                    "enumeration", "pipeline", "aggregation", "roofline"}
+
+
+def _run_cli(*args, timeout=180):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_REPO, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, "-m", "benchmarks.run", *args],
+                          capture_output=True, text=True, timeout=timeout,
+                          cwd=_REPO, env=env)
+
+
+@pytest.fixture(scope="module")
+def list_output():
+    r = _run_cli("--list")
+    assert r.returncode == 0, r.stderr[-2000:]
+    return r
+
+
+def test_list_prints_every_bench(list_output):
+    names = set(list_output.stdout.split())
+    assert names == EXPECTED_BENCHES
+    # the new aggregation bench is registered
+    assert "aggregation" in names
+
+
+def test_only_unknown_name_errors_cleanly(list_output):
+    r = _run_cli("--only", "nope")
+    assert r.returncode != 0
+    err = r.stderr.strip().splitlines()[-1]
+    assert "nope" in err and "available:" in err
+    # every real bench is suggested in the error message
+    assert "aggregation" in err and "enumeration" in err
+    assert "Traceback" not in r.stderr
+
+
+def test_only_mixed_known_unknown_errors_before_running(list_output):
+    r = _run_cli("--only", "aggregation,bogus")
+    assert r.returncode != 0
+    assert "bogus" in r.stderr and "Traceback" not in r.stderr
+    # nothing ran: no summary section was printed
+    assert "==== summary ====" not in r.stdout

@@ -275,6 +275,102 @@ def test_semantic_key_heterogeneous_sides_no_crash():
     assert len(cp.stages) == 3
 
 
+def _reduce_bindings(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"I": batch_from_dict({"k": rng.integers(0, 8, 64),
+                                  "v": rng.integers(0, 9, 64)})}
+
+
+def test_cache_miss_on_reduce_closure_constant_change():
+    """Two Reduce UDFs identical in bytecode but closing over different
+    constants must not share a semantic fingerprint."""
+    cache = ExecutableCache()
+    sch = Schema.of(k=np.int64, v=np.int64)
+
+    def build(mult):
+        def agg(g, out):
+            out.emit(g.keys().set("s", g.sum("v") * mult))
+
+        return F.reduce_(F.source("I", sch, num_records=256), ["k"], agg,
+                         name="R")
+
+    b = _reduce_bindings()
+    ref2 = executor.execute(build(2), b)
+    out2 = compile_plan(build(2), cache=cache).run(b)
+    out3 = compile_plan(build(3), cache=cache).run(b)
+    assert cache.stats().misses == 2 and cache.stats().traces == 2
+    assert out2.equivalent(ref2, atol=1e-6)
+    assert not out3.equivalent(ref2, atol=1e-6)
+    # ...while a rebuilt-from-scratch identical flow still hits
+    compile_plan(build(2), cache=cache).run(b)
+    assert cache.stats().hits == 1 and cache.stats().traces == 2
+
+
+def test_cache_miss_on_decomposability_only_change():
+    """Two Reduces that differ ONLY in decomposability (same UDF code; the
+    recipe suppressed via manual props) must not share a fingerprint."""
+    import dataclasses
+
+    cache = ExecutableCache()
+    sch = Schema.of(k=np.int64, v=np.int64)
+
+    def agg(g, out):
+        out.emit(g.keys().set("s", g.sum("v")))
+
+    src = F.source("I", sch, num_records=256)
+    auto = F.reduce_(src, ["k"], agg, name="R")
+    assert auto.props.combine is not None
+    manual = F.reduce_(src, ["k"], agg, name="R",
+                       props=dataclasses.replace(auto.props, combine=None))
+    from repro.core.pipeline import semantic_key
+
+    assert semantic_key(auto) != semantic_key(manual)
+    b = _reduce_bindings(1)
+    compile_plan(auto, cache=cache).run(b)
+    compile_plan(manual, cache=cache).run(b)
+    assert cache.stats().misses == 2 and cache.stats().traces == 2
+
+
+def test_split_stage_lowering_cache_hits_and_misses():
+    """Split plans lower to pre+merge stages with their own fingerprint:
+    repeated compilation of the SAME split plan shares one warm executable;
+    split and unsplit plans never collide; and a re-derived split of the
+    same flow (fresh closure objects) still hits by value."""
+    from repro.core.reorder import split_reduce
+
+    cache = ExecutableCache()
+    sch = Schema.of(k=np.int64, v=np.int64)
+
+    def build():
+        def agg(g, out):
+            out.emit(g.keys().set("s", g.sum("v")).set("n", g.count()))
+
+        return F.reduce_(F.source("I", sch, num_records=256), ["k"], agg,
+                         name="R", hints=Hints(distinct_keys=8))
+
+    root = build()
+    split = split_reduce(root)
+    stages = [s.kind for s in lower(split)]
+    assert stages == ["reduce", "reduce"]  # pre stage + merge stage
+
+    b = _reduce_bindings(2)
+    ref = executor.execute(root, b)
+    cp = compile_plan(split, cache=cache)
+    assert cp.run(b).equivalent(ref, atol=1e-6)
+    assert cache.stats().misses == 1 and cache.stats().traces == 1
+    # warm run: no retrace
+    cp.run(_reduce_bindings(3))
+    assert cache.stats().hits == 1 and cache.stats().traces == 1
+    # the unsplit plan is a different executable
+    compile_plan(root, cache=cache).run(b)
+    assert cache.stats().misses == 2 and cache.stats().traces == 2
+    # a split re-derived from a rebuilt flow hits the same warm executable
+    split2 = split_reduce(build())
+    compile_plan(split2, cache=cache).run(b)
+    s = cache.stats()
+    assert s.hits == 2 and s.traces == 2
+
+
 def test_cache_miss_on_source_num_records_change():
     """num_records feeds cardinality scaling, so it is part of identity."""
     cache = ExecutableCache()

@@ -2,27 +2,82 @@
 optimizer enumerates for a RANDOM flow of random black-box UDFs must produce
 the same result multiset as the original plan, for random input data.
 
-UDFs are generated as closures (modify / filter / add-attribute / reduce);
-the jaxpr analyzer derives their properties — nothing about their semantics
-is told to the optimizer.
+Two generators drive this file:
+
+* `flowgen.random_flow` — a seeded, dependency-free generator of tree-shaped
+  flows (Map/Reduce/Match/Cross/CoGroup over random schemas) whose
+  differential harness asserts every plan in the rewrite closure — split
+  Reduces included — is BIT-identical to the unoptimized eager execution;
+  these tests are tier-1 (no optional dependencies);
+* a hypothesis strategy for unary chains (skipped when hypothesis is not
+  installed), kept for shrinking-quality counterexamples.
+
+UDFs are generated as closures; the SCA analyzers derive their properties —
+nothing about their semantics is told to the optimizer.
 """
 
 import numpy as np
 import pytest
 
-# optional dependency: skip cleanly (instead of failing collection)
-# in environments without hypothesis
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+import flowgen
 
 from repro.core import executor, flow as F
 from repro.core.enumeration import enum_alternatives_alg1, enumerate_plans
 from repro.core.record import Schema, batch_from_dict
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - optional dependency
+    st = None
+
 FIELDS = ("A", "B", "C", "D")
 SCHEMA = Schema.of(**{f: np.int64 for f in FIELDS})
 
 
+# ---------------------------------------------------------------------------
+# Seeded tree-flow differential harness (tier-1, no optional deps)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(18))
+def test_flowgen_closure_bit_identical(seed):
+    """Every plan in the rewrite closure of a random tree flow — including
+    combiner/merge splits — produces the bit-identical row multiset."""
+    root, make_bindings = flowgen.random_flow(seed)
+    flowgen.assert_closure_identical(root, make_bindings(seed + 1000),
+                                     max_plans=2500)
+
+
+def test_flowgen_exercises_split_reduces():
+    """The generator must actually cover the split-Reduce rewrite (a harness
+    that never generates a decomposable Reduce would vacuously pass)."""
+    n_split = 0
+    for seed in range(18):
+        root, _ = flowgen.random_flow(seed)
+        n_split += sum(".pre" in p.canonical()
+                       for p in enumerate_plans(root, max_plans=2500))
+    assert n_split >= 10
+
+
+@pytest.mark.parametrize("seed", [0, 2, 6])
+def test_flowgen_masked_matches_eager(seed):
+    """Masked/jit execution of generated tree flows (joins, cogroups, splits
+    included) agrees with the eager reference."""
+    from repro.core.masked import run_flow_jit
+    from repro.core.operators import ReduceOp
+
+    root, make_bindings = flowgen.random_flow(seed)
+    b = make_bindings(seed + 77)
+    ref = executor.execute(root, b)
+    assert run_flow_jit(root, b).equivalent(ref, atol=1e-6)
+    # also check one split variant under jit when the flow admits one
+    for p in enumerate_plans(root, max_plans=2500):
+        if any(isinstance(n, ReduceOp) and n.combiner for n in p.iter_nodes()):
+            assert run_flow_jit(p, b).equivalent(ref, atol=1e-6)
+            break
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis unary-chain strategy (optional dependency)
+# ---------------------------------------------------------------------------
 def _modify(target, reads, mult, off):
     def udf(ir, out):
         val = ir.get(target) * 0
@@ -65,43 +120,6 @@ def _reducer(agg_field):
     return udf
 
 
-@st.composite
-def unary_flow(draw):
-    ops = []
-    n_ops = draw(st.integers(2, 5))
-    live = list(FIELDS)
-    n_added = 0
-    for i in range(n_ops):
-        kind = draw(st.sampled_from(["modify", "filter", "add", "reduce"]))
-        if kind == "modify":
-            target = draw(st.sampled_from(live))
-            reads = draw(st.lists(st.sampled_from(live), min_size=0,
-                                  max_size=2, unique=True))
-            ops.append(("map", _modify(target, tuple(reads),
-                                       draw(st.integers(1, 3)),
-                                       draw(st.integers(-2, 2)))))
-        elif kind == "filter":
-            reads = draw(st.lists(st.sampled_from(live), min_size=1,
-                                  max_size=2, unique=True))
-            ops.append(("map", _filter(tuple(reads),
-                                       draw(st.integers(2, 4)),
-                                       draw(st.integers(0, 1)))))
-        elif kind == "add":
-            reads = draw(st.lists(st.sampled_from(live), min_size=1,
-                                  max_size=2, unique=True))
-            name = f"X{n_added}"
-            n_added += 1
-            ops.append(("map", _adder(name, tuple(reads))))
-            live.append(name)
-        else:
-            key = draw(st.lists(st.sampled_from(live), min_size=1,
-                                max_size=2, unique=True))
-            agg = draw(st.sampled_from(live))
-            ops.append(("reduce", tuple(key), _reducer(agg)))
-            live = list(key) + [f"sum_{agg}", f"max_{agg}"]
-    return ops
-
-
 def _build(ops):
     node = F.source("I", SCHEMA)
     for i, op in enumerate(ops):
@@ -114,50 +132,88 @@ def _build(ops):
     return node
 
 
-@settings(max_examples=20, deadline=None)
-@given(ops=unary_flow(), seed=st.integers(0, 2**31))
-def test_all_enumerated_plans_equivalent(ops, seed):
-    try:
-        root = _build(ops)
-    except ValueError:
-        return  # generated op referenced a dropped field — invalid flow
-    rng = np.random.default_rng(seed)
-    data = batch_from_dict({f: rng.integers(-5, 6, 40) for f in FIELDS})
-    ref = executor.execute(root, {"I": data})
-    plans = enumerate_plans(root, max_plans=2000)
-    assert any(p.canonical() == root.canonical() for p in plans)
-    for p in plans:
-        got = executor.execute(p, {"I": data})
-        assert got.equivalent(ref), (
-            "reordered plan diverges:\n" + p.pretty() + "\nvs\n"
-            + root.pretty())
+if st is not None:
+    @st.composite
+    def unary_flow(draw):
+        ops = []
+        n_ops = draw(st.integers(2, 5))
+        live = list(FIELDS)
+        n_added = 0
+        for i in range(n_ops):
+            kind = draw(st.sampled_from(["modify", "filter", "add", "reduce"]))
+            if kind == "modify":
+                target = draw(st.sampled_from(live))
+                reads = draw(st.lists(st.sampled_from(live), min_size=0,
+                                      max_size=2, unique=True))
+                ops.append(("map", _modify(target, tuple(reads),
+                                           draw(st.integers(1, 3)),
+                                           draw(st.integers(-2, 2)))))
+            elif kind == "filter":
+                reads = draw(st.lists(st.sampled_from(live), min_size=1,
+                                      max_size=2, unique=True))
+                ops.append(("map", _filter(tuple(reads),
+                                           draw(st.integers(2, 4)),
+                                           draw(st.integers(0, 1)))))
+            elif kind == "add":
+                reads = draw(st.lists(st.sampled_from(live), min_size=1,
+                                      max_size=2, unique=True))
+                name = f"X{n_added}"
+                n_added += 1
+                ops.append(("map", _adder(name, tuple(reads))))
+                live.append(name)
+            else:
+                key = draw(st.lists(st.sampled_from(live), min_size=1,
+                                    max_size=2, unique=True))
+                agg = draw(st.sampled_from(live))
+                ops.append(("reduce", tuple(key), _reducer(agg)))
+                live = list(key) + [f"sum_{agg}", f"max_{agg}"]
+        return ops
 
+    @settings(max_examples=20, deadline=None)
+    @given(ops=unary_flow(), seed=st.integers(0, 2**31))
+    def test_all_enumerated_plans_equivalent(ops, seed):
+        try:
+            root = _build(ops)
+        except ValueError:
+            return  # generated op referenced a dropped field — invalid flow
+        rng = np.random.default_rng(seed)
+        data = batch_from_dict({f: rng.integers(-5, 6, 40) for f in FIELDS})
+        ref = executor.execute(root, {"I": data})
+        plans = enumerate_plans(root, max_plans=2000)
+        assert any(p.canonical() == root.canonical() for p in plans)
+        for p in plans:
+            got = executor.execute(p, {"I": data})
+            assert got.equivalent(ref), (
+                "reordered plan diverges:\n" + p.pretty() + "\nvs\n"
+                + root.pretty())
 
-@settings(max_examples=10, deadline=None)
-@given(ops=unary_flow())
-def test_algorithm1_matches_closure_on_unary_flows(ops):
-    try:
-        root = _build(ops)
-    except ValueError:
-        return
-    alg1 = {p.canonical() for p in enum_alternatives_alg1(root)}
-    closure = {p.canonical() for p in enumerate_plans(root)}
-    # Algorithm 1 explores exchanges of neighbours top-down; the closure is
-    # its fixpoint completion — on unary chains they must agree.
-    assert alg1 == closure
+    @settings(max_examples=10, deadline=None)
+    @given(ops=unary_flow())
+    def test_algorithm1_matches_closure_on_unary_flows(ops):
+        try:
+            root = _build(ops)
+        except ValueError:
+            return
+        alg1 = {p.canonical() for p in enum_alternatives_alg1(root)}
+        # Algorithm 1 explores exchanges of neighbours top-down; the closure
+        # is its fixpoint completion — on unary chains they must agree on
+        # the PURE REORDERING space (aggregation splits are a rewrite family
+        # Algorithm 1 does not know about, so they are excluded here).
+        closure = {p.canonical()
+                   for p in enumerate_plans(root, split_reduces=False)}
+        assert alg1 == closure
 
+    @settings(max_examples=15, deadline=None)
+    @given(ops=unary_flow(), seed=st.integers(0, 2**31))
+    def test_masked_executor_matches_eager_on_random_flows(ops, seed):
+        from repro.core.masked import run_flow_jit
 
-@settings(max_examples=15, deadline=None)
-@given(ops=unary_flow(), seed=st.integers(0, 2**31))
-def test_masked_executor_matches_eager_on_random_flows(ops, seed):
-    from repro.core.masked import run_flow_jit
-
-    try:
-        root = _build(ops)
-    except ValueError:
-        return
-    rng = np.random.default_rng(seed)
-    data = batch_from_dict({f: rng.integers(0, 6, 32) for f in FIELDS})
-    ref = executor.execute(root, {"I": data})
-    got = run_flow_jit(root, {"I": data})
-    assert got.equivalent(ref)
+        try:
+            root = _build(ops)
+        except ValueError:
+            return
+        rng = np.random.default_rng(seed)
+        data = batch_from_dict({f: rng.integers(0, 6, 32) for f in FIELDS})
+        ref = executor.execute(root, {"I": data})
+        got = run_flow_jit(root, {"I": data})
+        assert got.equivalent(ref)

@@ -111,3 +111,116 @@ def test_match_keys_join_read_set():
     p = analyze_udf(join, "match", [SCHEMA, s2], left_key=("A",),
                     right_key=("K",), mode="jaxpr")
     assert {"A", "K"} <= p.reads
+
+
+# ---------------------------------------------------------------------------
+# Analyzer agreement over every exemplar UDF in the suite
+# ---------------------------------------------------------------------------
+def _exemplar_operators():
+    """Every (udf, kind, in_schemas, key, left_key, right_key) exercised by
+    the test suite: this module's exemplars, the four paper evaluation flows,
+    and a sample of flowgen's generated tree flows."""
+    from repro.configs import flows
+    from repro.core.operators import (CoGroupOp, CrossOp, MapOp, MatchOp,
+                                      ReduceOp)
+
+    out = [(f1, "map", [SCHEMA], (), (), ()),
+           (f2, "map", [SCHEMA], (), (), ()),
+           (f3, "map", [SCHEMA], (), (), ())]
+
+    def agg(g, out_):
+        out_.emit(g.keys().set("s", g.sum("B")))
+
+    out.append((agg, "reduce", [SCHEMA], ("A",), (), ()))
+
+    roots = [builder()[0] for builder in flows.FLOWS.values()]
+    import flowgen
+
+    roots += [flowgen.random_flow(seed)[0] for seed in range(6)]
+    for root in roots:
+        for node in root.iter_nodes():
+            if isinstance(node, MapOp):
+                out.append((node.udf, "map", [node.child.out_schema],
+                            (), (), ()))
+            elif isinstance(node, ReduceOp):
+                out.append((node.udf, "reduce", [node.child.out_schema],
+                            node.key, (), ()))
+            elif isinstance(node, MatchOp):
+                out.append((node.udf, "match",
+                            [node.left.out_schema, node.right.out_schema],
+                            (), node.left_key, node.right_key))
+            elif isinstance(node, CrossOp):
+                out.append((node.udf, "cross",
+                            [node.left.out_schema, node.right.out_schema],
+                            (), (), ()))
+            elif isinstance(node, CoGroupOp):
+                out.append((node.udf, "cogroup",
+                            [node.left.out_schema, node.right.out_schema],
+                            (), node.left_key, node.right_key))
+    return out
+
+
+def test_jaxpr_sets_are_subsets_of_bytecode_sets():
+    """Safety through conservatism on EVERY exemplar UDF: the bytecode
+    analyzer's static estimates must be supersets of the exact (traced)
+    jaxpr sets — read, write, add and filter-field."""
+    checked = 0
+    for udf, kind, schemas, key, lk, rk in _exemplar_operators():
+        kw = dict(key=key, left_key=lk, right_key=rk)
+        try:
+            pb = analyze_udf(udf, kind, schemas, mode="bytecode", **kw)
+        except ValueError:
+            # the bytecode analyzer REFUSES dynamic field names (paper
+            # Sec. 5 assumption) instead of guessing — conservative, skip
+            continue
+        pj = analyze_udf(udf, kind, schemas, mode="jaxpr", **kw)
+        name = getattr(udf, "__name__", "udf")
+        assert pb.is_superset_of(pj), (name, pb, pj)
+        assert pb.filter_fields >= pj.filter_fields, name
+        checked += 1
+    assert checked > 25  # the sweep actually covered the exemplar corpus
+
+
+def test_decomposability_claims_match_eager_execution():
+    """A decomposability claim from EITHER analyzer must survive the eager
+    differential check (split vs unsplit on multiple partitions): the static
+    candidate may be optimistic, but never execution-contradicted."""
+    from repro.core.sca import decompose
+
+    n_claims = 0
+    for udf, kind, schemas, key, lk, rk in _exemplar_operators():
+        if kind != "reduce":
+            continue
+        for mode in ("bytecode", "jaxpr"):
+            try:
+                p = analyze_udf(udf, kind, schemas, key=key, mode=mode)
+            except ValueError:
+                continue  # bytecode refusal (dynamic field names)
+            if p.combine is None:
+                continue
+            n_claims += 1
+            assert decompose.verify(udf, schemas[0], key, p.combine), \
+                (getattr(udf, "__name__", "udf"), mode, p.combine)
+    assert n_claims >= 6  # the corpus exercises real claims
+
+
+def test_bytecode_candidate_is_verified_or_dropped():
+    """A UDF the static scan would flag decomposable but whose semantics are
+    NOT (aggregate argument depends on another aggregate) must come out of
+    `analyze_udf` with no recipe — the differential check rejects it."""
+    def sneaky(g, out):
+        # straight-line, single keys()-projecting emit, only get/sum method
+        # calls — the static scan proposes a recipe.  But the aggregate's
+        # argument is scaled by the ORDER-DEPENDENT first element of the
+        # batch, so shard-local partial sums do not compose.
+        b = g.get("B")
+        out.emit(g.keys().set("x", g.sum(b * b[0])))
+
+    from repro.core.sca import bytecode as bc_mod
+
+    static = bc_mod.analyze(sneaky, list(SCHEMA.fields), kat=True,
+                            key_fields=("A",))
+    assert static.combine is not None  # the static scan IS fooled...
+    for mode in ("auto", "bytecode", "jaxpr"):
+        p = analyze_udf(sneaky, "reduce", [SCHEMA], key=("A",), mode=mode)
+        assert p.combine is None  # ...and the differential check rejects it

@@ -1,0 +1,305 @@
+"""Decomposable aggregation push-down: split-Reduce rewrite, combiner
+physical strategy, eager-aggregation push below PK joins, and the
+distributed acceptance bar (combiner inserted + >=3x fewer rows crossing
+the repartition collective on a >=64-group / >=8k-row flow)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import executor, flow as F
+from repro.core.cost import estimate
+from repro.core.enumeration import enumerate_plans
+from repro.core.masked import run_flow_jit
+from repro.core.operators import Hints, ReduceOp
+from repro.core.optimizer import optimize, optimize_two_phase
+from repro.core.physical import Ctx
+from repro.core.record import Schema, batch_from_dict
+from repro.core.reorder import (pull_combiner_from_binary,
+                                push_combiner_into_binary, split_reduce,
+                                unsplit_reduce)
+
+SCHEMA = Schema.of(k=np.int64, v=np.int64, w=np.float64)
+N_ROWS, N_GROUPS = 8192, 64
+
+
+def _agg_flow(num_records=N_ROWS):
+    src = F.source("I", SCHEMA, num_records=num_records)
+
+    def agg(g, out):
+        out.emit(g.keys().set("s", g.sum("v")).set("mx", g.max("v"))
+                 .set("avg", g.mean("w")).set("n", g.count()))
+
+    return F.reduce_(src, ["k"], agg, name="Agg",
+                     hints=Hints(distinct_keys=N_GROUPS))
+
+
+def _bindings(seed=0, n=N_ROWS):
+    rng = np.random.default_rng(seed)
+    return {"I": batch_from_dict({"k": rng.integers(0, N_GROUPS, n),
+                                  "v": rng.integers(-100, 100, n),
+                                  "w": rng.uniform(0, 1, n)})}
+
+
+# ---------------------------------------------------------------------------
+# The rewrite
+# ---------------------------------------------------------------------------
+def test_split_preserves_schema_and_roundtrips():
+    root = _agg_flow()
+    split = split_reduce(root)
+    assert split is not None
+    pre, merge = split.child, split
+    assert isinstance(pre, ReduceOp) and pre.combiner
+    assert isinstance(merge, ReduceOp) and not merge.combiner
+    assert tuple(merge.out_schema.fields) == tuple(root.out_schema.fields)
+    assert all(merge.out_schema.dtypes[f] == root.out_schema.dtypes[f]
+               for f in root.out_schema.fields)
+    back = unsplit_reduce(split)
+    assert back is not None and back.canonical() == root.canonical()
+    # splitting is idempotent: neither half splits again
+    assert split_reduce(pre) is None
+    assert split_reduce(merge) is None
+
+
+def test_split_plans_equivalent_eager_and_jit():
+    root = _agg_flow()
+    split = split_reduce(root)
+    b = _bindings(3)
+    ref = executor.execute(root, b)
+    assert executor.execute(split, b).equivalent(ref, atol=1e-6)
+    assert run_flow_jit(split, b).equivalent(ref, atol=1e-4)
+    # integer aggregates are BIT-identical across the split
+    ref_ints = {f: sorted(np.asarray(ref[f]).tolist())
+                for f in ("k", "s", "mx", "n")}
+    got = executor.execute(split, b)
+    for f, vals in ref_ints.items():
+        assert sorted(np.asarray(got[f]).tolist()) == vals
+
+
+def test_schema_dependent_reduce_never_decomposable():
+    """A schema-reflecting Reduce UDF must not receive a combine recipe
+    (the merge replay presents the ORIGINAL field list, which a rewritten
+    plan may have changed) — regression: the jaxpr path once attached the
+    recipe BEFORE OR-ing in the bytecode schema_dependent flag."""
+    src = F.source("I", SCHEMA, num_records=1000)
+
+    def agg(g, out):
+        n_fields = len(g.fields)  # schema reflection
+        out.emit(g.keys().set("s", g.sum("v") * n_fields))
+
+    r = F.reduce_(src, ["k"], agg, name="Agg")
+    assert r.props.schema_dependent
+    assert r.props.combine is None
+    assert split_reduce(r) is None
+
+
+def test_non_decomposable_reduce_does_not_split():
+    src = F.source("I", SCHEMA, num_records=1000)
+
+    def keep(g, out):
+        out.emit_records(where=g.any(g.get("v") > 0))
+
+    r = F.reduce_(src, ["k"], keep, name="Keep")
+    assert r.props.combine is None
+    assert split_reduce(r) is None
+
+
+# ---------------------------------------------------------------------------
+# Physical strategies + costing
+# ---------------------------------------------------------------------------
+def test_optimizer_inserts_combiner_on_shuffle_flow():
+    """Acceptance: on a Reduce-after-shuffle flow with >=64 groups over
+    >=8k rows the chosen plan contains the combiner below the merge."""
+    root = _agg_flow()
+    res = optimize(root, Ctx(dop=8))
+    names = [p.node.name for p in _walk(res.best.plan)]
+    assert "Agg.pre" in names and "Agg.merge" in names
+    pre_plan = next(p for p in _walk(res.best.plan)
+                    if p.node.name == "Agg.pre")
+    merge_plan = next(p for p in _walk(res.best.plan)
+                      if p.node.name == "Agg.merge")
+    assert pre_plan.ship == ("forward",)       # combiner never ships
+    assert pre_plan.node_cost.net == 0.0
+    assert merge_plan.ship == ("partition",)   # merge pays the (small) shuffle
+    # the interleaved search and the exhaustive reference agree
+    two = optimize_two_phase(root, Ctx(dop=8))
+    assert res.best.flow.op_names() == two.best.flow.op_names()
+    assert abs(res.best.cost - two.best.cost) <= 1e-12
+
+
+def test_partitioned_source_keeps_unsplit_plan():
+    """When the source is already partitioned on the key there is nothing to
+    save: the unsplit forward Reduce must win (the combiner adds work)."""
+    src = F.source("I", SCHEMA, num_records=N_ROWS, partitioned_on=["k"])
+
+    def agg(g, out):
+        out.emit(g.keys().set("s", g.sum("v")))
+
+    root = F.reduce_(src, ["k"], agg, name="Agg",
+                     hints=Hints(distinct_keys=N_GROUPS))
+    res = optimize(root, Ctx(dop=8))
+    assert ".pre" not in res.best.order()
+    plan = res.best.plan
+    assert plan.ship == ("forward",)
+
+
+def test_combiner_estimate_scales_with_dop():
+    root = _agg_flow()
+    split = split_reduce(root)
+    pre = split.child
+    assert estimate(pre, {}, dop=1).rows == N_GROUPS
+    assert estimate(pre, {}, dop=8).rows == N_GROUPS * 8
+    # capped by the input cardinality
+    assert estimate(pre, {}, dop=10 ** 6).rows == N_ROWS
+    # the merge consumes the combiner's (dop-scaled) output
+    assert estimate(split, {}, dop=8).rows == N_GROUPS
+
+
+def _walk(plan):
+    yield plan
+    for i in plan.inputs:
+        yield from _walk(i)
+
+
+# ---------------------------------------------------------------------------
+# Eager aggregation: combiner below a PK-FK Match
+# ---------------------------------------------------------------------------
+def _join_flow():
+    src = F.source("I", SCHEMA, num_records=N_ROWS)
+    dim = F.source("Dim", Schema.of(dk=np.int64, dv=np.int64),
+                   num_records=N_GROUPS)
+    j = F.match(src, dim, ["k"], ["dk"], name="J",
+                hints=Hints(pk_side="right"))
+
+    def agg(g, out):
+        out.emit(g.keys().set("s", g.sum("v")))
+
+    return F.reduce_(j, ["k"], agg, name="Agg",
+                     hints=Hints(distinct_keys=N_GROUPS))
+
+
+def test_push_combiner_below_pk_match_and_back():
+    root = _join_flow()
+    split = split_reduce(root)
+    pushed = push_combiner_into_binary(split, 0)
+    assert pushed is not None
+    # tree shape: merge over Match over (pre over I, Dim)
+    assert pushed.name == "Agg.merge"
+    assert pushed.child.name == "J"
+    assert pushed.child.children[0].name == "Agg.pre"
+    assert tuple(pushed.out_schema.fields) == tuple(root.out_schema.fields)
+    back = pull_combiner_from_binary(pushed, 0)
+    assert back is not None and back.canonical() == split.canonical()
+    # no push into the PK side (the combiner's key lives on the FK side)
+    assert push_combiner_into_binary(split, 1) is None
+
+    b = _bindings(5)
+    b["Dim"] = batch_from_dict({"dk": np.arange(N_GROUPS),
+                                "dv": np.arange(N_GROUPS) * 3})
+    ref = executor.execute(root, b)
+    for t in (split, pushed):
+        assert executor.execute(t, b).equivalent(ref, atol=1e-6)
+
+
+def test_no_push_without_pk_guard():
+    """A general (non-PK) join blocks the eager push — invariant grouping
+    needs the other side to hold at most one partner per group."""
+    src = F.source("I", SCHEMA, num_records=N_ROWS)
+    dim = F.source("Dim", Schema.of(dk=np.int64, dv=np.int64),
+                   num_records=N_GROUPS)
+    j = F.match(src, dim, ["k"], ["dk"], name="J")  # no pk_side hint
+
+    def agg(g, out):
+        out.emit(g.keys().set("s", g.sum("v")))
+
+    root = F.reduce_(j, ["k"], agg, name="Agg",
+                     hints=Hints(distinct_keys=N_GROUPS))
+    split = split_reduce(root)
+    assert split is not None
+    assert push_combiner_into_binary(split, 0) is None
+    assert push_combiner_into_binary(split, 1) is None
+
+
+def test_closure_contains_split_and_pushed_plans():
+    root = _join_flow()
+    cans = {p.canonical() for p in enumerate_plans(root, max_plans=5000)}
+    assert any(".pre" in c and ".merge" in c for c in cans)
+    # eager-aggregation variant: pre inside the join's left input
+    assert any("J(Agg.pre" in c for c in cans)
+    # reordering-only space excludes all of them
+    cans0 = {p.canonical()
+             for p in enumerate_plans(root, split_reduces=False)}
+    assert not any(".pre" in c for c in cans0)
+    assert cans0 < cans
+
+
+# ---------------------------------------------------------------------------
+# Distributed acceptance: combiner before the repartition collective
+# ---------------------------------------------------------------------------
+_DISTRIBUTED_SCRIPT = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    sys.path.insert(0, %r)
+    import numpy as np
+    from repro.core import executor, flow as F
+    from repro.core import distributed as DX
+    from repro.core.operators import Hints
+    from repro.core.optimizer import optimize
+    from repro.core.physical import Ctx
+    from repro.core.record import Schema, batch_from_dict
+
+    S = Schema.of(k=np.int64, v=np.int64, w=np.float64)
+    src = F.source("I", S, num_records=8192)
+
+    def agg(g, out):
+        out.emit(g.keys().set("s", g.sum("v")).set("avg", g.mean("w")))
+
+    root = F.reduce_(src, ["k"], agg, name="Agg",
+                     hints=Hints(distinct_keys=64))
+    rng = np.random.default_rng(11)
+    b = {"I": batch_from_dict({"k": rng.integers(0, 64, 8192),
+                               "v": rng.integers(-100, 100, 8192),
+                               "w": rng.uniform(0, 1, 8192)})}
+    ref = executor.execute(root, b)
+
+    res = optimize(root, Ctx(dop=8))
+    assert ".pre" in res.best.order(), res.best.order()
+    stats = DX.shuffle_stats()
+    stats.clear()
+    split_out = DX.execute_distributed(res.best.plan, b)
+    assert split_out.equivalent(ref, atol=1e-4)
+    split_wire = stats.wire_rows
+    assert stats.collectives == 1
+
+    unsplit = next(rp for rp in res.ranked if ".pre" not in rp.order())
+    stats.clear()
+    un_out = DX.execute_distributed(unsplit.plan, b)
+    assert un_out.equivalent(ref, atol=1e-4)
+    un_wire = stats.wire_rows
+
+    # integer aggregate columns are bit-identical between split and unsplit
+    for f in ("k", "s"):
+        assert sorted(np.asarray(split_out[f]).tolist()) \\
+            == sorted(np.asarray(un_out[f]).tolist()), f
+    ratio = un_wire / split_wire
+    assert ratio >= 3.0, (un_wire, split_wire)
+    print("OK ratio=%%.1f split=%%d unsplit=%%d"
+          %% (ratio, split_wire, un_wire))
+""")
+
+
+@pytest.mark.parametrize("dummy", [0])
+def test_distributed_combiner_reduces_shuffle_rows(dummy):
+    """Acceptance: on 8 workers the chosen split plan ships >=3x fewer rows
+    through the repartition all_to_all than the unsplit plan, with
+    bit-identical integer aggregates.  Runs in a subprocess so the forced
+    8-device host platform cannot leak into other tests."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", _DISTRIBUTED_SCRIPT % src],
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
