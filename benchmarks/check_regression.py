@@ -19,12 +19,19 @@ and BOTH aggregation artifacts must show the combiner inserted with
 >= `min-shuffle-reduction` x fewer rows crossing the repartition (the
 aggregation push-down acceptance bar).
 
+Order-aware serving bar: in BOTH pipeline artifacts, the device-resident
+serving rate must beat eager numpy execution on every serving flow
+(`pipeline_bps >= eager_bps * min-pipeline-vs-eager` on q15, clickstream
+and textmining) — the ratio is measured within one run on one host, so it
+is machine-independent even though the absolute rates are not.
+
 Tolerances are env-configurable so CI hosts with different perf can widen
 them without code changes:
 
-    BENCH_REGRESSION_FACTOR       allowed slowdown factor       (default 2.0)
-    BENCH_MIN_FUSION_SPEEDUP      map-chain speedup floor       (default 3.0)
-    BENCH_MIN_SHUFFLE_REDUCTION   aggregation reduction floor   (default 3.0)
+    BENCH_REGRESSION_FACTOR        allowed slowdown factor       (default 2.0)
+    BENCH_MIN_FUSION_SPEEDUP       map-chain speedup floor       (default 3.0)
+    BENCH_MIN_SHUFFLE_REDUCTION    aggregation reduction floor   (default 3.0)
+    BENCH_MIN_PIPELINE_VS_EAGER    serving-vs-eager rate floor   (default 1.0)
 """
 
 from __future__ import annotations
@@ -86,6 +93,36 @@ def check_bench(name: str, factor: float, errors: list[str]) -> int:
     return compared
 
 
+# serving flows that must beat eager (map-chain is a synthetic shape and is
+# covered by the fusion floor instead)
+EAGER_GATED_FLOWS = ("q15", "clickstream", "textmining")
+
+
+def check_pipeline_vs_eager(floor: float, errors: list[str]) -> None:
+    """Acceptance bar: device-resident serving beats eager execution on
+    every serving flow, in BOTH the committed baseline and the quick run."""
+    for quick in (False, True):
+        path = baseline_path("pipeline", quick=quick)
+        if not os.path.exists(path):
+            return  # already reported by check_bench
+        tag = "quick" if quick else "baseline"
+        rows = _rows_by_flow(_load(path), "rows")
+        n_before = len(errors)
+        for flow in EAGER_GATED_FLOWS:
+            row = rows.get(flow)
+            if row is None:
+                errors.append(f"pipeline[{tag}]: missing flow {flow!r}")
+                continue
+            pipe, eager = row.get("pipeline_bps", 0), row.get("eager_bps", 0)
+            if pipe < eager * floor:
+                errors.append(
+                    f"pipeline[{tag}]/{flow}: pipeline_bps {pipe:.4g} below "
+                    f"eager_bps {eager:.4g} x floor {floor:.2g}")
+        if len(errors) == n_before:
+            print(f"ok pipeline[{tag}]: serving beats eager on "
+                  f"{', '.join(EAGER_GATED_FLOWS)} (floor {floor:.2g})")
+
+
 def check_fusion_floor(min_speedup: float, errors: list[str]) -> None:
     base_path = baseline_path("pipeline", quick=False)
     if not os.path.exists(base_path):
@@ -141,6 +178,9 @@ def main() -> None:
     ap.add_argument("--min-shuffle-reduction", type=float, default=float(
         os.environ.get("BENCH_MIN_SHUFFLE_REDUCTION", "3.0")),
         help="required split-vs-unsplit shuffled-row reduction factor")
+    ap.add_argument("--min-pipeline-vs-eager", type=float, default=float(
+        os.environ.get("BENCH_MIN_PIPELINE_VS_EAGER", "1.0")),
+        help="required device-resident-serving vs eager rate floor")
     args = ap.parse_args()
 
     errors: list[str] = []
@@ -148,6 +188,7 @@ def main() -> None:
         check_bench(name, args.factor, errors)
     check_fusion_floor(args.min_speedup, errors)
     check_aggregation_floor(args.min_shuffle_reduction, errors)
+    check_pipeline_vs_eager(args.min_pipeline_vs_eager, errors)
 
     if errors:
         print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)

@@ -103,12 +103,16 @@ def estimate(node: Node, memo: Optional[dict] = None, dop: int = 1) -> Stats:
         st = Stats(rows=rows, width=width, distinct=groups)
     elif isinstance(node, MatchOp):
         ls, rs = estimate(node.left, memo, dop), estimate(node.right, memo, dop)
+        # the UDF-level selectivity is applied exactly once, via the shared
+        # `_map_selectivity_like` factor below — the PK branches must not
+        # fold it in a second time (that squared the hint, and the runtime's
+        # seeded compaction buffers then truncated real rows)
         if node.hints.join_fanout is not None:
             rows = ls.rows * node.hints.join_fanout
         elif node.hints.pk_side == "right":
-            rows = ls.rows * (node.hints.selectivity or 1.0)
+            rows = ls.rows
         elif node.hints.pk_side == "left":
-            rows = rs.rows * (node.hints.selectivity or 1.0)
+            rows = rs.rows
         else:
             # |L||R| / max(d_L, d_R) with defaulted distinct counts
             dl = ls.distinct or max(1.0, ls.rows * DEFAULT_GROUPING_FACTOR)
@@ -130,6 +134,25 @@ def estimate(node: Node, memo: Optional[dict] = None, dop: int = 1) -> Stats:
 
     memo[key] = st
     return st
+
+
+def seed_source_stats(root: Node, rows_by_name, memo: dict) -> dict:
+    """Override Source cardinalities in `memo` with ACTUAL bound batch sizes.
+
+    The declared `Source.num_records` describes deployment scale; a serving
+    batch is typically orders of magnitude smaller.  Seeding the memo before
+    downstream `estimate` calls re-prices every selectivity and grouping
+    hint at the batch's real scale, so compaction capacities track the data
+    actually flowing — the runtime analogue of the paper's compiler-hint
+    re-estimation.  Seeded rows are CAPACITIES (>= the valid count), so the
+    correction is conservative; hints wrong by more than the compaction
+    slack could truncate exactly as they could at declared scale."""
+    for node in root.iter_nodes():
+        if isinstance(node, Source) and node.name in rows_by_name:
+            memo[struct_id(node)] = Stats(
+                rows=float(max(rows_by_name[node.name], 1)),
+                width=node.out_schema.width_bytes())
+    return memo
 
 
 def _map_selectivity_like(node) -> float:

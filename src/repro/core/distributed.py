@@ -148,28 +148,32 @@ def _broadcast(b: M.MaskedBatch, axis: str, p: int) -> M.MaskedBatch:
 def _exec_stages(stages, shards: Mapping[str, M.MaskedBatch],
                  axis: str, p: int, use_kernels: bool,
                  stats_memo: dict, slack: float,
-                 root: Node) -> M.MaskedBatch:
+                 root: Node, use_order: bool = True) -> M.MaskedBatch:
     from . import pipeline as PL
+    from .cost import seed_source_stats
 
-    # shard capacities are global/p, so scaling vs per-shard nominal size
-    # mirrors masked.cardinality_scale on the global batch
-    scale = 1.0
-    for n_ in root.iter_nodes():
-        if isinstance(n_, Source) and n_.name in shards:
-            scale = max(scale, shards[n_.name].capacity * p
-                        / max(n_.num_records, 1))
+    # runtime re-estimation (same as the local pipeline body): price every
+    # compaction at the GLOBAL scale of the batches actually bound — a shard
+    # holds capacity/p rows of each source
+    seed_source_stats(root, {name: b.capacity * p
+                             for name, b in shards.items()}, stats_memo)
 
     def compact(b: M.MaskedBatch, n: Node) -> M.MaskedBatch:
-        return M.compact_to_estimate(b, n, stats_memo, slack, scale, shards=p)
+        return M.compact_to_estimate(b, n, stats_memo, slack, shards=p)
 
     results: list[M.MaskedBatch] = []
     for st in stages:
         node = st.top
+        in_orders = st.in_orders or ((),) * len(st.inputs)
         ins = []
         for i, (ref, how) in enumerate(zip(st.inputs, st.ship)):
             b = shards[ref[1]] if ref[0] == "source" else results[ref[1]]
             if how == "forward":
-                pass
+                # only forwarded streams keep their per-shard order; the
+                # collectives below interleave rows, and _repartition /
+                # _broadcast construct order-free batches accordingly
+                if use_order and in_orders[i] and not b.order:
+                    b = b.with_order(in_orders[i])
             elif how == "partition":
                 if isinstance(node, ReduceOp):
                     keys = node.key
@@ -184,7 +188,8 @@ def _exec_stages(stages, shards: Mapping[str, M.MaskedBatch],
             else:
                 raise ValueError(how)
             ins.append(b)
-        results.append(compact(PL.execute_stage(st, ins, use_kernels), node))
+        results.append(compact(
+            PL.execute_stage(st, ins, use_kernels, use_order), node))
     return results[-1]
 
 
@@ -194,8 +199,14 @@ def _exec_stages(stages, shards: Mapping[str, M.MaskedBatch],
 def execute_distributed(plan: PhysPlan, bindings: Mapping[str, RecordBatch],
                         mesh: Optional[Mesh] = None, axis: str = "data",
                         use_kernels: bool = False, slack: float = 4.0,
-                        out_capacity: Optional[int] = None) -> RecordBatch:
-    """Execute a physical plan data-parallel over `mesh[axis]`."""
+                        out_capacity: Optional[int] = None,
+                        use_order: bool = True) -> RecordBatch:
+    """Execute a physical plan data-parallel over `mesh[axis]`.
+
+    Sharding preserves per-shard order for sorted sources: both the
+    partitioned-on pre-hash (stable argsort) and the round-robin block split
+    keep each shard a stable subsequence of the bound batch, so
+    `Source.sorted_on` elisions stay sound inside `shard_map`."""
     if mesh is None:
         devs = np.array(jax.devices())
         mesh = Mesh(devs, (axis,))
@@ -253,7 +264,7 @@ def execute_distributed(plan: PhysPlan, bindings: Mapping[str, RecordBatch],
         if not stages:
             return local[plan.node.name]
         return _exec_stages(stages, local, axis, p, use_kernels, stats_memo,
-                            slack, plan.node)
+                            slack, plan.node, use_order)
 
     out = run(*[global_batches[n] for n in names])
     return out.to_record_batch()

@@ -11,6 +11,17 @@ This is what lets a PACT flow run *inside* jit/shard_map — e.g. on-device
 record preprocessing fused ahead of a train step — which the paper's Java
 runtime could not express at all.
 
+Order-aware execution (DESIGN.md §8): every `MaskedBatch` carries trace-time
+static ORDER metadata (`order`: the column prefix its valid rows are sorted
+on).  Sources propagate `Source.sorted_on`, record-wise operators preserve
+whatever the UDF does not write, and a Reduce emits key-ordered output — so
+`_exec_reduce`, the PK-probe side of `_exec_match_pk` and `_exec_cogroup`
+skip their lexsorts whenever the input is already ordered.  Compaction is a
+prefix-sum pack (cumsum over the mask → monotone positions → gather), linear
+apart from a vectorized binary search, and stable by construction, so it
+PRESERVES sort order — the property that lets order survive stage
+boundaries.
+
 Hot loops (segment reduction, sorted probe) route through the Pallas kernels
 in `repro.kernels` when `use_kernels=True` (TPU target; interpret-mode on
 CPU); the default jnp path is the oracle they are tested against.
@@ -26,21 +37,53 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import invoke
+from . import invoke, scans
 from .cost import estimate
 from .operators import (CoGroupOp, CrossOp, MapOp, MatchOp, Node, ReduceOp,
                         Source)
 from .record import RecordBatch
+from .reorder import eff_writes
 from .udf import JitSegmentOps
+
+
+# ---------------------------------------------------------------------------
+# Order metadata (static, trace-time)
+# ---------------------------------------------------------------------------
+def order_prefix(order: Sequence[str], fields, writes=frozenset()) -> tuple:
+    """Longest prefix of `order` that survives projection to `fields` and is
+    not clobbered by `writes`.  Sortedness is lexicographic, so it only
+    survives as a PREFIX: once a column is dropped or rewritten, everything
+    after it stops meaning anything."""
+    out = []
+    for k in order:
+        if k not in fields or k in writes:
+            break
+        out.append(k)
+    return tuple(out)
+
+
+def order_covers(order: Sequence[str], key: Sequence[str]) -> bool:
+    """Does `order` guarantee rows with equal `key` are contiguous?  True iff
+    some prefix of `order` is a permutation of `key` (column names are unique,
+    so that prefix has exactly `len(key)` entries)."""
+    return (len(key) > 0 and len(order) >= len(key)
+            and set(order[:len(key)]) == set(key))
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class MaskedBatch:
-    """Fixed-capacity struct-of-arrays + validity mask (a pytree)."""
+    """Fixed-capacity struct-of-arrays + validity mask (a pytree).
+
+    `order` is STATIC aux data (part of the pytree structure, so traces with
+    different order assumptions never unify): the subsequence of valid rows
+    is lexicographically nondecreasing on this column-name prefix.  `()`
+    means no known order.  Validity gaps are allowed — order claims nothing
+    about invalid slots."""
 
     columns: dict
     valid: jnp.ndarray  # bool[capacity]
+    order: tuple = ()
 
     @property
     def capacity(self) -> int:
@@ -48,14 +91,25 @@ class MaskedBatch:
 
     def tree_flatten(self):
         names = tuple(sorted(self.columns))
-        return tuple(self.columns[n] for n in names) + (self.valid,), names
+        return (tuple(self.columns[n] for n in names) + (self.valid,),
+                (names, self.order))
 
     @classmethod
-    def tree_unflatten(cls, names, leaves):
-        return cls(columns=dict(zip(names, leaves[:-1])), valid=leaves[-1])
+    def tree_unflatten(cls, aux, leaves):
+        names, order = aux
+        return cls(columns=dict(zip(names, leaves[:-1])), valid=leaves[-1],
+                   order=order)
+
+    def with_order(self, order: Sequence[str]) -> "MaskedBatch":
+        """Same data, annotated with a (caller-guaranteed) sort order."""
+        order = order_prefix(order, self.columns.keys())
+        if order == self.order:
+            return self
+        return MaskedBatch(self.columns, self.valid, order)
 
     @staticmethod
-    def from_record_batch(b: RecordBatch, capacity: Optional[int] = None) -> "MaskedBatch":
+    def from_record_batch(b: RecordBatch, capacity: Optional[int] = None,
+                          order: Sequence[str] = ()) -> "MaskedBatch":
         b = b.to_numpy().compact()
         n = b.capacity
         cap = capacity or max(n, 1)
@@ -65,33 +119,51 @@ class MaskedBatch:
             pad = np.zeros((cap - n,) + v.shape[1:], dtype=v.dtype)
             cols[f] = jnp.asarray(np.concatenate([v, pad]))
         valid = jnp.asarray(np.arange(cap) < n)
-        return MaskedBatch(cols, valid)
+        return MaskedBatch(cols, valid,
+                           order_prefix(order, b.fields))
 
     def to_record_batch(self) -> RecordBatch:
         cols = {k: np.asarray(v) for k, v in self.columns.items()}
         return RecordBatch(cols, np.asarray(self.valid)).compact()
 
     def compact(self, capacity: int) -> "MaskedBatch":
-        """Re-pack valid rows first and truncate/grow to `capacity`."""
-        order = jnp.argsort(~self.valid, stable=True)
-        cap = self.capacity
+        """Re-pack valid rows first and truncate/grow to `capacity`.
 
-        def take(v):
-            g = v[order]
-            if capacity <= cap:
-                return g[:capacity]
-            pad = jnp.zeros((capacity - cap,) + v.shape[1:], v.dtype)
-            return jnp.concatenate([g, pad])
+        Prefix-sum pack: `cumsum(valid)` gives each output slot's source row
+        (found by monotone vectorized binary search), then one gather per
+        column — no comparator sort.  Stable by construction (positions are
+        strictly increasing in source order), so it PRESERVES `order`;
+        slots past the valid count hold clamped garbage under valid=False."""
+        cv = scans.cumsum(self.valid.astype(jnp.int32))
+        src = jnp.searchsorted(
+            cv, jnp.arange(1, capacity + 1, dtype=jnp.int32))
+        src = jnp.minimum(src, self.capacity - 1)
+        cols = {k: v[src] for k, v in self.columns.items()}
+        valid = jnp.arange(capacity, dtype=jnp.int32) < cv[-1]
+        return MaskedBatch(cols, valid, self.order)
 
-        cols = {k: take(v) for k, v in self.columns.items()}
-        valid = take(self.valid) if capacity <= cap else jnp.concatenate(
-            [self.valid[order], jnp.zeros(capacity - cap, bool)])
-        return MaskedBatch(cols, valid)
+
+def _compact_perm(valid: jnp.ndarray) -> jnp.ndarray:
+    """The stable valids-first PERMUTATION of all slots (valid rows in
+    original order, then invalid rows in original order) — what
+    `argsort(~valid, stable=True)` computes, via two prefix sums instead of a
+    comparator sort."""
+    n = valid.shape[0]
+    cv = scans.cumsum(valid.astype(jnp.int32))
+    ci = scans.cumsum((~valid).astype(jnp.int32))
+    j = jnp.arange(n, dtype=jnp.int32)
+    nv = cv[-1]
+    pv = jnp.searchsorted(cv, j + 1)
+    pi = jnp.searchsorted(ci, j + 1 - nv)
+    return jnp.where(j < nv, pv, pi).astype(jnp.int32)
 
 
 def _concat(batches: Sequence[MaskedBatch]) -> MaskedBatch:
+    if len(batches) == 1:
+        return batches[0]
     fields = batches[0].columns.keys()
     cols = {f: jnp.concatenate([b.columns[f] for b in batches]) for f in fields}
+    # interleaving parts destroys any one part's order
     return MaskedBatch(cols, jnp.concatenate([b.valid for b in batches]))
 
 
@@ -108,22 +180,62 @@ def _project(cols: Mapping, schema, n: int) -> dict:
 # ---------------------------------------------------------------------------
 # Grouping machinery (static shapes)
 # ---------------------------------------------------------------------------
+def _segments_contiguous(cols: Mapping, key: Sequence[str], valid):
+    """Segment fields for rows already arranged valids-first and key-sorted
+    (the post-`_sort_by_key` layout): adjacent-slot key compares suffice."""
+    cap = valid.shape[0]
+    same = jnp.ones(cap, bool)
+    for k in key:
+        kv = jnp.asarray(cols[k])
+        same = same & jnp.concatenate([jnp.zeros(1, bool), kv[1:] == kv[:-1]])
+    prev_valid = jnp.concatenate([jnp.zeros(1, bool), valid[:-1]])
+    is_start = valid & (~same | ~prev_valid)
+    seg = jnp.maximum(scans.cumsum(is_start.astype(jnp.int32)) - 1, 0)
+    return seg, is_start
+
+
+def _segments_gappy(cols: Mapping, key: Sequence[str], valid):
+    """Segment fields for key-ordered rows with validity GAPS: each valid row
+    compares against the previous VALID row's key (a cummax scan finds it),
+    so interspersed invalid slots neither split nor merge groups.  Returned
+    `seg` is nondecreasing over ALL slots (invalid slots inherit the previous
+    group), as the segment-scan kernels require."""
+    cap = valid.shape[0]
+    i32 = jnp.arange(cap, dtype=jnp.int32)
+    pvi = scans.cummax(jnp.where(valid, i32, jnp.int32(-1)))
+    prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), pvi[:-1]])
+    pidx = jnp.maximum(prev, 0)
+    differs = prev < 0
+    for k in key:
+        kv = jnp.asarray(cols[k])
+        differs = differs | (kv != kv[pidx])
+    is_start = valid & differs
+    seg = jnp.maximum(scans.cumsum(is_start.astype(jnp.int32)) - 1, 0)
+    return seg, is_start
+
+
 def _sort_by_key(b: MaskedBatch, key: Sequence[str]):
     """Valid rows first, ordered by composite key.  Returns (sorted batch,
-    segment_ids, is_group_start)."""
+    segment_ids, is_start).  Single-key inputs sort one sentinel code (a
+    cheaper single-operand sort; the gap-tolerant segmentation makes a
+    sentinel collision with a genuine max-value key harmless)."""
+    if len(key) == 1:
+        kv = jnp.asarray(b.columns[key[0]])
+        big = (jnp.finfo(kv.dtype).max if jnp.issubdtype(kv.dtype, jnp.floating)
+               else jnp.iinfo(kv.dtype).max)
+        code = jnp.where(b.valid, kv, big)
+        _, order = jax.lax.sort_key_val(
+            code, jnp.arange(b.capacity, dtype=jnp.int32))
+        cols = {f: v[order] for f, v in b.columns.items()}
+        valid = b.valid[order]
+        seg, is_start = _segments_gappy(cols, key, valid)
+        return MaskedBatch(cols, valid, tuple(key)), seg, is_start
     keys = tuple(jnp.asarray(b.columns[k]) for k in key)
     order = jnp.lexsort(tuple(reversed(keys)) + (~b.valid,))
     cols = {f: v[order] for f, v in b.columns.items()}
     valid = b.valid[order]
-    same = jnp.ones(b.capacity, bool)
-    for k in key:
-        kv = cols[k]
-        same = same & jnp.concatenate([jnp.zeros(1, bool), kv[1:] == kv[:-1]])
-    prev_valid = jnp.concatenate([jnp.zeros(1, bool), valid[:-1]])
-    is_start = valid & (~same | ~prev_valid)
-    seg = jnp.cumsum(is_start.astype(jnp.int32)) - 1
-    seg = jnp.maximum(seg, 0)
-    return MaskedBatch(cols, valid), seg, is_start
+    seg, is_start = _segments_contiguous(cols, key, valid)
+    return MaskedBatch(cols, valid, tuple(key)), seg, is_start
 
 
 def compact_to_estimate(b: "MaskedBatch", node: Node, stats_memo: dict,
@@ -135,8 +247,14 @@ def compact_to_estimate(b: "MaskedBatch", node: Node, stats_memo: dict,
     pipeline and the distributed per-shard body.  `shards` doubles as the
     estimator's degree of parallelism so a combiner's per-shard capacity
     covers the worst case of every group present on every worker."""
-    est = estimate(node, stats_memo, dop=shards).rows / shards * slack * scale
-    cap = int(min(b.capacity, max(bucket_capacity(est), 8)))
+    est = estimate(node, stats_memo, dop=shards).rows / shards * scale
+    # variance guard: actual cardinalities fluctuate ~Poisson around the
+    # estimate, so the multiplicative slack alone under-provisions SMALL
+    # estimates (std/mean ~ 1/sqrt(est)).  Taking the max of the two terms
+    # (rather than stacking them) keeps worst-case-bound estimates like the
+    # combiner's `groups * dop` from being inflated past their bound.
+    rows = max(est * slack, est + 4.0 * np.sqrt(max(est, 0.0)))
+    cap = int(min(b.capacity, max(bucket_capacity(rows), 8)))
     return b.compact(cap) if cap < b.capacity else b
 
 
@@ -167,6 +285,7 @@ def segment_reduce_backend(use_kernels: bool):
 # ---------------------------------------------------------------------------
 def _exec_map(op: MapOp, b: MaskedBatch) -> MaskedBatch:
     col = invoke.run_map_udf(op.udf, dict(b.columns))
+    out_order = order_prefix(b.order, op.out_schema.fields, eff_writes(op))
     parts = []
     for em in col.emissions:
         if em.builder is None:
@@ -175,7 +294,9 @@ def _exec_map(op: MapOp, b: MaskedBatch) -> MaskedBatch:
         valid = b.valid
         if em.where is not None:
             valid = valid & jnp.asarray(em.where).astype(bool)
-        parts.append(MaskedBatch(cols, valid))
+        # emissions are slot-aligned with the input, so a where-mask only
+        # opens validity gaps — the valid subsequence stays ordered
+        parts.append(MaskedBatch(cols, valid, out_order))
     if not parts:
         return MaskedBatch(
             {f: jnp.zeros(1, op.out_schema.dtype(f)) for f in op.out_schema.fields},
@@ -183,14 +304,25 @@ def _exec_map(op: MapOp, b: MaskedBatch) -> MaskedBatch:
     return _concat(parts)
 
 
-def _exec_reduce(op: ReduceOp, b: MaskedBatch, use_kernels: bool) -> MaskedBatch:
-    sb, seg, is_start = _sort_by_key(b, op.key)
+def _exec_reduce(op: ReduceOp, b: MaskedBatch, use_kernels: bool,
+                 use_order: bool = True) -> MaskedBatch:
+    key = tuple(op.key)
+    if use_order and order_covers(b.order, key):
+        # input already groups equal keys contiguously: segment directly over
+        # the (possibly gappy) slots, no sort, no repack
+        sb = b
+        seg, is_start = _segments_gappy(b.columns, key, b.valid)
+        base_order = b.order
+    else:
+        sb, seg, is_start = _sort_by_key(b, key)
+        base_order = key
     nseg = b.capacity  # worst case: every valid row its own group
     segcls = segment_reduce_backend(use_kernels)
-    segops = segcls(seg, nseg, record_valid=sb.valid)
+    segops = segcls(seg, nseg, record_valid=sb.valid, is_start=is_start)
     col = invoke.run_kat_udf(op.udf, dict(sb.columns), segops, op.key)
     ngroups = jnp.sum(is_start)
     group_valid = jnp.arange(nseg) < ngroups
+    w = eff_writes(op)
 
     parts = []
     for em in col.emissions:
@@ -202,38 +334,89 @@ def _exec_reduce(op: ReduceOp, b: MaskedBatch, use_kernels: bool) -> MaskedBatch
                 gw = jnp.asarray(em.group_where).astype(bool)
                 valid = valid & gw[seg]
             parts.append(MaskedBatch(
-                _project(cols, op.out_schema, b.capacity), valid))
+                _project(cols, op.out_schema, b.capacity), valid,
+                order_prefix(base_order, op.out_schema.fields, w)))
         else:
             cols = em.builder.columns()
             valid = group_valid
             if em.where is not None:
                 valid = valid & jnp.asarray(em.where).astype(bool)
+            # one slot per segment; segments were numbered in key order
             parts.append(MaskedBatch(
-                _project(cols, op.out_schema, nseg), valid))
+                _project(cols, op.out_schema, nseg), valid,
+                order_prefix(tuple(base_order)[:len(key)],
+                             op.out_schema.fields, w)))
     return _concat(parts)
 
 
+def _match_codes(op: MatchOp, lb: MaskedBatch, rb: MaskedBatch):
+    """Collision-free comparable key codes for a Match: one code per row such
+    that `lcode[i] == rcode[j]` iff the composite keys are equal, and codes
+    sort in key order.  Single-column keys ARE their own code (after dtype
+    promotion); composite keys get dense joint ranks from one shared sort
+    over both sides — no `c * 2^31 + v` pairing, which silently collided and
+    overflowed for key values >= 2^31."""
+    if len(op.left_key) == 1:
+        lc = jnp.asarray(lb.columns[op.left_key[0]])
+        rc = jnp.asarray(rb.columns[op.right_key[0]])
+        ct = jnp.promote_types(lc.dtype, rc.dtype)
+        return lc.astype(ct), rc.astype(ct)
+    nl = lb.capacity
+    ks = []
+    for a, b_ in zip(op.left_key, op.right_key):
+        la = jnp.asarray(lb.columns[a])
+        ra = jnp.asarray(rb.columns[b_])
+        ct = jnp.promote_types(la.dtype, ra.dtype)
+        ks.append(jnp.concatenate([la.astype(ct), ra.astype(ct)]))
+    n = ks[0].shape[0]
+    order = jnp.lexsort(tuple(reversed(ks)))
+    is_new = jnp.zeros(n, bool).at[0].set(True)
+    for k in ks:
+        sk = k[order]
+        is_new = is_new | jnp.concatenate([jnp.ones(1, bool),
+                                           sk[1:] != sk[:-1]])
+    ranks_sorted = jnp.cumsum(is_new.astype(jnp.int32)) - 1
+    rank = jnp.zeros(n, jnp.int32).at[order].set(ranks_sorted,
+                                                 unique_indices=True)
+    return rank[:nl], rank[nl:]
+
+
 def _exec_match_pk(op: MatchOp, lb: MaskedBatch, rb: MaskedBatch,
-                   use_kernels: bool) -> MaskedBatch:
+                   use_kernels: bool, use_order: bool = True) -> MaskedBatch:
     """Equi-join where the right side is unique on its key (PK side): each
-    left row matches at most one right row — sorted-search probe."""
-    rkeys = tuple(jnp.asarray(rb.columns[k]) for k in op.right_key)
-    order = jnp.lexsort(tuple(reversed(rkeys)) + (~rb.valid,))
-    rcols = {f: v[order] for f, v in rb.columns.items()}
-    rvalid = rb.valid[order]
+    left row matches at most one right row — sorted-search probe.  When the
+    PK side is already ordered on its key, the probe runs directly against
+    its slots (a cummax fills validity gaps monotonically) and the per-batch
+    re-sort is skipped."""
+    lcode, rcode_raw = _match_codes(op, lb, rb)
 
-    # composite keys -> single sortable code via lexicographic pairing
-    def code(cols, names, valid):
-        c = None
-        for k in names:
-            v = jnp.asarray(cols[k]).astype(jnp.int64)
-            c = v if c is None else c * jnp.int64(1 << 31) + v
-        big = jnp.iinfo(jnp.int64).max
-        return jnp.where(valid, c, big)
-
-    rcode = code(rcols, op.right_key, rvalid)
-    rcode = jnp.sort(rcode)
-    lcode = code(lb.columns, op.left_key, lb.valid)
+    # elide only for single-column keys: their codes are the column itself,
+    # so a key-ordered PK side needs no per-batch work at all (composite
+    # keys pay the joint rank sort in _match_codes either way)
+    if use_order and len(op.right_key) == 1 \
+            and tuple(rb.order[:1]) == tuple(op.right_key):
+        # the valid subsequence of rcode_raw is nondecreasing; back-fill
+        # invalid slots with the previous valid code (cummax) so the whole
+        # array is monotone.  A fill slot repeats the code of a valid slot
+        # BEFORE it, so searchsorted(left) lands on the valid occurrence —
+        # except in the leading all-invalid run, whose -inf/min fill can
+        # equal a genuine minimal key; clamping pos past that run restores
+        # the invariant (slots before the first valid row never match).
+        lo = (-jnp.inf if jnp.issubdtype(rcode_raw.dtype, jnp.floating)
+              else jnp.iinfo(rcode_raw.dtype).min)
+        rcode = scans.cummax(
+            jnp.where(rb.valid, rcode_raw, jnp.asarray(lo, rcode_raw.dtype)))
+        first_valid = jnp.argmax(rb.valid).astype(jnp.int32)
+        rcols, rvalid = rb.columns, rb.valid
+    else:
+        first_valid = None
+        # sort by (code, valid-first): equal-code invalid rows land AFTER the
+        # valid ones, so no sentinel arithmetic is needed and a left search
+        # still finds the valid row first
+        order = jnp.lexsort((~rb.valid, rcode_raw))
+        rcode = rcode_raw[order]
+        rcols = {f: v[order] for f, v in rb.columns.items()}
+        rvalid = rb.valid[order]
 
     if use_kernels:
         from ..kernels import ops as kops
@@ -241,11 +424,14 @@ def _exec_match_pk(op: MatchOp, lb: MaskedBatch, rb: MaskedBatch,
         pos = kops.sorted_probe(rcode, lcode)
     else:
         pos = jnp.searchsorted(rcode, lcode)
+    if first_valid is not None:
+        pos = jnp.maximum(pos, first_valid)
     pos = jnp.clip(pos, 0, rb.capacity - 1)
-    hit = (rcode[pos] == lcode) & lb.valid
+    hit = (rcode[pos] == lcode) & lb.valid & rvalid[pos]
 
     gathered = {f: v[pos] for f, v in rcols.items()}
     col = invoke.run_pair_udf(op.udf, dict(lb.columns), gathered)
+    out_order = order_prefix(lb.order, op.out_schema.fields, eff_writes(op))
     parts = []
     for em in col.emissions:
         if em.builder is None:
@@ -253,8 +439,11 @@ def _exec_match_pk(op: MatchOp, lb: MaskedBatch, rb: MaskedBatch,
         valid = hit
         if em.where is not None:
             valid = valid & jnp.asarray(em.where).astype(bool)
+        # output is slot-aligned with the LEFT input (each left row matches
+        # at most one PK row), so the left side's order survives
         parts.append(MaskedBatch(
-            _project(em.builder.columns(), op.out_schema, lb.capacity), valid))
+            _project(em.builder.columns(), op.out_schema, lb.capacity), valid,
+            out_order))
     return _concat(parts)
 
 
@@ -283,7 +472,7 @@ def _exec_cross(op, lb: MaskedBatch, rb: MaskedBatch,
 
 
 def _exec_cogroup(op: CoGroupOp, lb: MaskedBatch, rb: MaskedBatch,
-                  use_kernels: bool) -> MaskedBatch:
+                  use_kernels: bool, use_order: bool = True) -> MaskedBatch:
     """Align both sides on the union key domain with static shapes."""
     nl, nr = lb.capacity, rb.capacity
     # joint sort of all keys to build dense codes over the union domain
@@ -307,9 +496,19 @@ def _exec_cogroup(op: CoGroupOp, lb: MaskedBatch, rb: MaskedBatch,
     ngroups = jnp.sum(is_start)
     group_valid = jnp.arange(nseg) < ngroups
 
-    # per-side segment-sorted order (first()/group scans need contiguity)
-    lord = jnp.lexsort((~lb.valid, lseg))
-    rord = jnp.lexsort((~rb.valid, rseg))
+    # Per-side segment-sorted order (first()/group scans need contiguity).
+    # A side ordered EXACTLY on its key (not a permuted cover: union
+    # segments are numbered in the operator's key order, so only the exact
+    # prefix makes this side's segment ids nondecreasing) degenerates its
+    # segment sort to the stable valids-first permutation — two prefix sums
+    # instead of a lexsort.
+    def side_perm(b_, key, seg):
+        if use_order and tuple(b_.order[:len(key)]) == tuple(key):
+            return _compact_perm(b_.valid)
+        return jnp.lexsort((~b_.valid, seg))
+
+    lord = side_perm(lb, op.left_key, lseg)
+    rord = side_perm(rb, op.right_key, rseg)
     lcols = {f: v[lord] for f, v in lb.columns.items()}
     rcols = {f: v[rord] for f, v in rb.columns.items()}
     lseg, rseg = lseg[lord], rseg[rord]
@@ -338,7 +537,8 @@ def _exec_cogroup(op: CoGroupOp, lb: MaskedBatch, rb: MaskedBatch,
 def execute_masked(root: Node, bindings: Mapping[str, MaskedBatch],
                    use_kernels: bool = False,
                    compact_slack: float = 2.0,
-                   compact: bool = True) -> MaskedBatch:
+                   compact: bool = True,
+                   use_order: bool = True) -> MaskedBatch:
     """Execute `root` on masked batches (traceable: call under jit).
 
     `compact=True` re-packs intermediates to `estimate(node) * slack`
@@ -349,6 +549,10 @@ def execute_masked(root: Node, bindings: Mapping[str, MaskedBatch],
     `Source.num_records`, estimates are scaled up proportionally —
     compaction must never drop valid rows just because the request outgrew
     the scale the flow was declared at.
+
+    `use_order=True` honors `Source.sorted_on` at execution time and lets
+    key-ordered intermediates skip their sorts (DESIGN.md §8); order
+    metadata is still PROPAGATED either way, only elision is gated.
     """
     stats_memo: dict = {}
     memo: dict[int, MaskedBatch] = {}
@@ -364,26 +568,28 @@ def execute_masked(root: Node, bindings: Mapping[str, MaskedBatch],
             return memo[id(node)]
         if isinstance(node, Source):
             out = bindings[node.name]
+            if use_order and node.sorted_on and not out.order:
+                out = out.with_order(tuple(node.sorted_on))
         elif isinstance(node, MapOp):
             out = _exec_map(node, run(node.child))
         elif isinstance(node, ReduceOp):
-            out = _exec_reduce(node, run(node.child), use_kernels)
+            out = _exec_reduce(node, run(node.child), use_kernels, use_order)
         elif isinstance(node, MatchOp):
             lb, rb = run(node.left), run(node.right)
             if node.hints.pk_side == "right":
-                out = _exec_match_pk(node, lb, rb, use_kernels)
+                out = _exec_match_pk(node, lb, rb, use_kernels, use_order)
             elif node.hints.pk_side == "left":
                 from .reorder import commute as _commute
 
                 flipped = _commute(node)
-                out = _exec_match_pk(flipped, rb, lb, use_kernels)
+                out = _exec_match_pk(flipped, rb, lb, use_kernels, use_order)
             else:
                 out = _exec_cross(node, lb, rb, node.left_key, node.right_key)
         elif isinstance(node, CrossOp):
             out = _exec_cross(node, run(node.left), run(node.right))
         elif isinstance(node, CoGroupOp):
             out = _exec_cogroup(node, run(node.left), run(node.right),
-                                use_kernels)
+                                use_kernels, use_order)
         else:
             raise TypeError(type(node).__name__)
         out = maybe_compact(node, out)
@@ -411,7 +617,8 @@ def bucket_capacity(x: float) -> int:
 
 def run_flow_jit(root: Node, bindings: Mapping[str, RecordBatch],
                  capacities: Optional[Mapping[str, int]] = None,
-                 use_kernels: bool = False) -> RecordBatch:
+                 use_kernels: bool = False,
+                 use_order: bool = True) -> RecordBatch:
     """Convenience: bind numpy batches, jit-execute, return a RecordBatch."""
     caps = capacities or {}
     masked = {name: MaskedBatch.from_record_batch(b, caps.get(name))
@@ -419,6 +626,7 @@ def run_flow_jit(root: Node, bindings: Mapping[str, RecordBatch],
 
     @functools.partial(jax.jit, static_argnums=())
     def go(mb):
-        return execute_masked(root, mb, use_kernels=use_kernels)
+        return execute_masked(root, mb, use_kernels=use_kernels,
+                              use_order=use_order)
 
     return go(masked).to_record_batch()

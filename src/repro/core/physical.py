@@ -272,9 +272,14 @@ def _expand(node: Node, ctx: Ctx, stats_memo: dict,
             cpu = cin.rows * node.hints.cpu_flops_per_record
             if not presorted:
                 cpu += sort_flops(cin.rows / ctx.dop) * ctx.dop
+            comb_sort = []
+            for k in node.key:
+                if k not in node.attrs():  # prefix semantics, as above
+                    break
+                comb_sort.append(k)
             props = Props(partitions=frozenset(g for g in iprops.partitions
                                                if g <= kset),
-                          sort=tuple(node.key))
+                          sort=tuple(comb_sort))
             cost = CostVec(mem=_t_mem(cin.bytes, st.bytes, ctx),
                            cpu=_t_cpu(cpu, ctx))
             out.append(PhysPlan(node=node, inputs=(iplan,), ship=("forward",),
@@ -299,10 +304,16 @@ def _expand(node: Node, ctx: Ctx, stats_memo: dict,
                 cost = CostVec(net=net,
                                mem=_t_mem(cin.bytes, st.bytes, ctx),
                                cpu=_t_cpu(cpu, ctx))
+                out_sort = []
+                for k in node.key:
+                    # sort order survives only as a PREFIX: dropping a key
+                    # column breaks lexicographic order of everything after
+                    if k not in node.attrs():
+                        break
+                    out_sort.append(k)
                 props = Props(partitions=frozenset(g for g in parts
                                                    if g <= node.attrs()),
-                              sort=tuple(k for k in node.key
-                                         if k in node.attrs()))
+                              sort=tuple(out_sort))
                 out.append(PhysPlan(node=node, inputs=(iplan,), ship=(ship,),
                                     local=local, props=props, node_cost=cost))
 

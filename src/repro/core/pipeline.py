@@ -9,29 +9,44 @@ pipeline of STAGES and jit-compiles the whole pipeline into one executable
 (DESIGN.md §5):
 
 * maximal unary Map/filter chains fuse into a single traced stage — one
-  dispatch and one boundary compaction instead of N of each (a per-operator
-  compaction is an O(cap log cap) argsort);
+  dispatch and one boundary compaction instead of N of each (boundary
+  compaction is a stable linear prefix-sum pack, `MaskedBatch.compact`);
 * Reduce / Match / Cross / CoGroup remain explicit stage boundaries (they
   re-shape the batch: sorts, probes, segment reductions), routed through the
   Pallas kernels when `use_kernels` is set;
 * every static capacity is drawn from the geometric `bucket_capacity`
-  ladder, so the number of distinct traced shapes stays O(log n).
+  ladder, so the number of distinct traced shapes stays O(log n);
+* stages carry the ORDER properties the physical layer reasons about
+  (`Stage.in_orders`/`out_order`, DESIGN.md §8): a stage whose input is
+  already sorted on its key skips the per-batch lexsort entirely, honoring
+  `Source.sorted_on` at execution time rather than only in costing.
 
 Executables are cached in a process-wide `ExecutableCache` keyed on a
 commute-invariant SEMANTIC fingerprint of the flow (operator names, UDF
-code objects, keys, hints, source schemas and cardinalities — see
-`semantic_key`) plus source capacity buckets, `use_kernels` and
-`compact_slack`.  Commute invariance means two plans that differ only in
-join argument order — multiset-equal by construction — share one warm
-executable; fingerprinting UDF code by VALUE means a rebuilt-from-scratch
-but identical flow also hits, while two same-named operators with
-different UDFs never collide.  `optimize(...)` returns a result whose
-`.compile()` yields a ready-to-run `CompiledPlan`:
+code objects, keys, hints, source schemas, cardinalities and declared sort
+orders — see `semantic_key`) plus source capacity buckets and runtime
+orders, the lowered stages' order assumptions, `use_kernels`,
+`compact_slack`, `use_order` and input donation.  Commute invariance means
+two plans that differ only in join argument order — multiset-equal by
+construction — share one warm executable; fingerprinting UDF code by VALUE
+means a rebuilt-from-scratch but identical flow also hits, while two
+same-named operators with different UDFs never collide.  Plans that differ
+only in an ORDER assumption (and therefore in which sorts they elide) miss
+and recompile — never share a wrong executable.  `optimize(...)` returns a
+result whose `.compile()` yields a ready-to-run `CompiledPlan`:
 
     res = optimize(flow)
     cp = res.compile()
     out = cp.run(bindings)      # cold: trace + compile
     out = cp.run(bindings2)     # warm: cached executable, no retrace
+
+Device-resident serving: `run` pays a host round trip per call (bind numpy
+→ device → compute → fetch).  For the steady-state serving loop,
+`bind_device` stages batches onto the device once and `run_device` executes
+warm executables masked-in/masked-out with no host transfer — outputs stay
+on device for the next consumer (e.g. a fused train step), which is where
+the fused pipeline beats eager execution outright (bench_pipeline's
+`pipeline_bps` column).
 
 The same lowering drives `distributed.execute_distributed`: per-shard local
 work executes the fused stages, with shipping collectives at stage inputs.
@@ -42,16 +57,20 @@ from __future__ import annotations
 import collections
 import dataclasses
 import hashlib
+import warnings
 from typing import Mapping, Optional, Sequence
 
 import jax
 import numpy as np
 
 from . import masked as M
+from .cost import seed_source_stats
 from .operators import (CoGroupOp, CrossOp, MapOp, MatchOp, Node, ReduceOp,
                         Source)
 from .physical import PhysPlan
 from .record import RecordBatch
+from .reorder import eff_writes
+from .udf import Card, KatEmit
 
 
 # ---------------------------------------------------------------------------
@@ -147,6 +166,9 @@ def semantic_key(node: Node, _memo: Optional[dict] = None) -> tuple:
     if hit is not None:
         return hit
     if isinstance(node, Source):
+        # sorted_on is an ORDER assumption: two otherwise-identical flows
+        # that differ only in a declared source order elide different sorts
+        # and must never share an executable
         out = ("src", node.name, _schema_sig(node.out_schema),
                node.num_records, node.partitioned_on, node.sorted_on)
     elif isinstance(node, MapOp):
@@ -192,6 +214,13 @@ class Stage:
     order).  `ship`/`input_plans` carry the physical shipping strategy and
     the producing sub-plan per input when lowered from a `PhysPlan`
     (`lower_phys`); logical lowering ships everything `forward`.
+
+    `in_orders`/`out_order` are the runtime order properties (DESIGN.md §8):
+    per input, the column prefix the incoming stream is statically known to
+    be sorted on (the physical layer's `Props.sort`, restricted to what the
+    masked executors actually guarantee), and the order of this stage's
+    output.  Executors use them to elide sorts; the executable cache
+    fingerprints them so plans with different elisions never share a trace.
     """
 
     kind: str                   # 'chain'|'reduce'|'match'|'cross'|'cogroup'
@@ -199,6 +228,8 @@ class Stage:
     inputs: tuple
     ship: tuple = ()
     input_plans: tuple = ()
+    in_orders: tuple = ()
+    out_order: tuple = ()
 
     @property
     def top(self) -> Node:
@@ -207,6 +238,49 @@ class Stage:
 
 _KIND = {ReduceOp: "reduce", MatchOp: "match", CrossOp: "cross",
          CoGroupOp: "cogroup"}
+
+# emission classes whose masked execution yields a single slot-aligned part
+_SINGLE_RAT = (Card.ONE, Card.AT_MOST_ONE)
+_GROUP_EMITS = (KatEmit.PER_GROUP, KatEmit.PER_GROUP_FILTER)
+_RECORD_EMITS = (KatEmit.PASSTHROUGH, KatEmit.PASSTHROUGH_FILTER)
+
+
+def _chain_out_order(ops: Sequence[Node], in_order: tuple) -> tuple:
+    """Order surviving a fused Map chain: each record-wise op preserves the
+    prefix it neither drops nor writes — but only when it emits exactly one
+    slot-aligned part (multi-emission concatenation interleaves slots)."""
+    o = tuple(in_order)
+    for op in ops:
+        if op.props.card not in _SINGLE_RAT:
+            return ()
+        o = M.order_prefix(o, op.out_schema.fields, eff_writes(op))
+    return o
+
+
+def _stage_out_order(kind: str, node: Node, in_orders: tuple,
+                     ops: tuple = ()) -> tuple:
+    """Statically-known sort order of a stage's output, mirroring exactly
+    what the masked executors produce (NOT what a Nephele sort-merge local
+    strategy would — `_exec_cross` emits pair order, so a hint-less Match
+    yields no order even though its cost model prices a sort-merge)."""
+    if kind == "chain":
+        return _chain_out_order(ops, in_orders[0])
+    if kind == "reduce":
+        key = tuple(node.key)
+        emit = node.props.kat_emit
+        base = in_orders[0] if M.order_covers(in_orders[0], key) else key
+        if emit in _GROUP_EMITS:
+            base = tuple(base)[:len(key)]
+        elif emit not in _RECORD_EMITS:
+            return ()
+        return M.order_prefix(base, node.out_schema.fields, eff_writes(node))
+    if kind == "match":
+        side = {"right": 0, "left": 1}.get(node.hints.pk_side)
+        if side is None or node.props.card not in _SINGLE_RAT:
+            return ()
+        return M.order_prefix(in_orders[side], node.out_schema.fields,
+                              eff_writes(node))
+    return ()  # cross / cogroup: pair or union-key order, claims nothing
 
 
 def _use_counts(root, children_of) -> dict:
@@ -232,10 +306,27 @@ def lower(root: Node) -> tuple[Stage, ...]:
 
     Shared subtree objects become shared stages (computed once); a Map
     chain therefore only fuses through nodes with a single consumer.
+    Order properties propagate from `Source.sorted_on` through the stages.
     """
     uses = _use_counts(root, lambda n: n.children)
     stages: list[Stage] = []
     memo: dict[int, tuple] = {}
+    ref_order: dict[tuple, tuple] = {}
+
+    def order_of(ref: tuple, node: Node) -> tuple:
+        if ref[0] == "source":
+            return M.order_prefix(node.sorted_on or (),
+                                  node.out_schema.fields)
+        return ref_order.get(ref, ())
+
+    def emit(kind, ops, inputs, ship, in_orders, input_plans=()):
+        out_order = _stage_out_order(kind, ops[-1], in_orders, ops)
+        stages.append(Stage(kind=kind, ops=ops, inputs=inputs, ship=ship,
+                            input_plans=input_plans, in_orders=in_orders,
+                            out_order=out_order))
+        ref = ("stage", len(stages) - 1)
+        ref_order[ref] = out_order
+        return ref
 
     def visit(node: Node) -> tuple:
         ref = memo.get(id(node))
@@ -250,14 +341,14 @@ def lower(root: Node) -> tuple[Stage, ...]:
                 chain.append(n)
                 n = n.child
             child_ref = visit(n)
-            stages.append(Stage(kind="chain", ops=tuple(reversed(chain)),
-                                inputs=(child_ref,), ship=("forward",)))
-            ref = ("stage", len(stages) - 1)
+            ref = emit("chain", tuple(reversed(chain)), (child_ref,),
+                       ("forward",), (order_of(child_ref, n),))
         else:
             refs = tuple(visit(c) for c in node.children)
-            stages.append(Stage(kind=_KIND[type(node)], ops=(node,),
-                                inputs=refs, ship=("forward",) * len(refs)))
-            ref = ("stage", len(stages) - 1)
+            in_orders = tuple(order_of(r, c)
+                              for r, c in zip(refs, node.children))
+            ref = emit(_KIND[type(node)], (node,), refs,
+                       ("forward",) * len(refs), in_orders)
         memo[id(node)] = ref
         return ref
 
@@ -268,10 +359,34 @@ def lower(root: Node) -> tuple[Stage, ...]:
 
 
 def lower_phys(plan: PhysPlan) -> tuple[Stage, ...]:
-    """Lower a physical plan: same fusion, plus per-input ship strategies."""
+    """Lower a physical plan: same fusion, plus per-input ship strategies.
+
+    Order properties thread through from the physical plans' `Props`: a
+    source contributes `Props.sort` (= `sorted_on`), but an input shipped by
+    `partition` or `broadcast` contributes NOTHING — collectives interleave
+    rows, so only forwarded streams keep their order (the runtime analogue
+    of `physical._preserved`)."""
     uses = _use_counts(plan, lambda p: p.inputs)
     stages: list[Stage] = []
     memo: dict[int, tuple] = {}
+    ref_order: dict[tuple, tuple] = {}
+
+    def order_of(ref: tuple, p: PhysPlan) -> tuple:
+        if ref[0] == "source":
+            return M.order_prefix(p.props.sort, p.node.out_schema.fields)
+        return ref_order.get(ref, ())
+
+    def emit(kind, ops, inputs, ship, in_orders, input_plans):
+        # a shipped (non-forward) input arrives order-free on every worker
+        in_orders = tuple(o if s == "forward" else ()
+                          for o, s in zip(in_orders, ship))
+        out_order = _stage_out_order(kind, ops[-1], in_orders, ops)
+        stages.append(Stage(kind=kind, ops=ops, inputs=inputs, ship=ship,
+                            input_plans=input_plans, in_orders=in_orders,
+                            out_order=out_order))
+        ref = ("stage", len(stages) - 1)
+        ref_order[ref] = out_order
+        return ref
 
     def visit(p: PhysPlan) -> tuple:
         ref = memo.get(id(p))
@@ -288,16 +403,15 @@ def lower_phys(plan: PhysPlan) -> tuple[Stage, ...]:
                 chain.append(cur)
                 cur = cur.inputs[0]
             child_ref = visit(cur)
-            stages.append(Stage(
-                kind="chain", ops=tuple(cp.node for cp in reversed(chain)),
-                inputs=(child_ref,), ship=("forward",), input_plans=(cur,)))
-            ref = ("stage", len(stages) - 1)
+            ref = emit("chain", tuple(cp.node for cp in reversed(chain)),
+                       (child_ref,), ("forward",),
+                       (order_of(child_ref, cur),), (cur,))
         else:
             refs = tuple(visit(ip) for ip in p.inputs)
-            stages.append(Stage(kind=_KIND[type(node)], ops=(node,),
-                                inputs=refs, ship=p.ship,
-                                input_plans=p.inputs))
-            ref = ("stage", len(stages) - 1)
+            in_orders = tuple(order_of(r, ip)
+                              for r, ip in zip(refs, p.inputs))
+            ref = emit(_KIND[type(node)], (node,), refs, p.ship, in_orders,
+                       p.inputs)
         memo[id(p)] = ref
         return ref
 
@@ -307,13 +421,49 @@ def lower_phys(plan: PhysPlan) -> tuple[Stage, ...]:
     return tuple(stages)
 
 
+def _order_sig(stages: Sequence[Stage]) -> tuple:
+    """Fingerprint of every order assumption a lowered stage list bakes into
+    its trace (part of the executable-cache key: two lowerings of the same
+    flow that elide different sorts must not share an executable)."""
+    return tuple((st.kind, st.ship, st.in_orders, st.out_order)
+                 for st in stages)
+
+
+class _Interned:
+    """Hash-once wrapper for the (large, deeply nested) semantic fingerprint.
+
+    A `semantic_key` tuple embeds bytecode and repr strings for every UDF;
+    tuples re-hash recursively on every dict probe, which costs more than the
+    whole warm serving step.  Wrapping it caches the hash so a cache lookup
+    is O(1); equality still compares the full key (identity fast path for
+    the common same-handle case)."""
+
+    __slots__ = ("key", "_hash")
+
+    def __init__(self, key):
+        self.key = key
+        self._hash = hash(key)
+
+    def __hash__(self):
+        return self._hash
+
+    def __eq__(self, other):
+        if self is other:
+            return True
+        return isinstance(other, _Interned) and self.key == other.key
+
+
 # ---------------------------------------------------------------------------
 # Stage execution (traceable; shared by the local pipeline and the
 # per-shard body of distributed execution)
 # ---------------------------------------------------------------------------
 def execute_stage(stage: Stage, ins: Sequence[M.MaskedBatch],
-                  use_kernels: bool) -> M.MaskedBatch:
-    """Run one stage's local (per-worker) computation on masked batches."""
+                  use_kernels: bool,
+                  use_order: bool = True) -> M.MaskedBatch:
+    """Run one stage's local (per-worker) computation on masked batches.
+
+    Order elision keys off the input batches' `order` metadata; callers
+    attach `stage.in_orders` (for forwarded inputs) before invoking."""
     if stage.kind == "chain":
         b = ins[0]
         for op in stage.ops:
@@ -321,38 +471,47 @@ def execute_stage(stage: Stage, ins: Sequence[M.MaskedBatch],
         return b
     node = stage.top
     if stage.kind == "reduce":
-        return M._exec_reduce(node, ins[0], use_kernels)
+        return M._exec_reduce(node, ins[0], use_kernels, use_order)
     if stage.kind == "match":
         lb, rb = ins
         if node.hints.pk_side == "right":
-            return M._exec_match_pk(node, lb, rb, use_kernels)
+            return M._exec_match_pk(node, lb, rb, use_kernels, use_order)
         if node.hints.pk_side == "left":
             from .reorder import commute as _commute
 
-            return M._exec_match_pk(_commute(node), rb, lb, use_kernels)
+            return M._exec_match_pk(_commute(node), rb, lb, use_kernels,
+                                    use_order)
         return M._exec_cross(node, lb, rb, node.left_key, node.right_key)
     if stage.kind == "cross":
         return M._exec_cross(node, *ins)
     if stage.kind == "cogroup":
-        return M._exec_cogroup(node, *ins, use_kernels)
+        return M._exec_cogroup(node, *ins, use_kernels, use_order=use_order)
     raise TypeError(f"unknown stage kind {stage.kind!r}")
 
 
 def run_stages(stages: Sequence[Stage], bindings: Mapping[str, M.MaskedBatch],
                use_kernels: bool, compact_slack: float,
-               stats_memo: dict, scale: float = 1.0) -> M.MaskedBatch:
+               stats_memo: dict, scale: float = 1.0,
+               use_order: bool = True) -> M.MaskedBatch:
     """Execute a lowered stage list on masked batches (traceable).
 
     Compaction fires once per stage boundary (not per fused operator), to
-    the bucketed capacity of `estimate * slack * scale` — `scale` corrects
-    for bound batches larger than the flow's nominal source sizes (see
-    `masked.cardinality_scale`).
+    the bucketed capacity of the node's cardinality estimate — callers seed
+    `stats_memo` with the bound batches' actual sizes
+    (`cost.seed_source_stats`) so capacities track the data really flowing.
+    Compaction is stable, so stage-boundary repacking PRESERVES the order
+    the next stage's elision relies on.
     """
     results: list[M.MaskedBatch] = []
     for st in stages:
-        ins = [bindings[ref[1]] if ref[0] == "source" else results[ref[1]]
-               for ref in st.inputs]
-        out = execute_stage(st, ins, use_kernels)
+        ins = []
+        orders = st.in_orders or ((),) * len(st.inputs)
+        for ref, o in zip(st.inputs, orders):
+            b = bindings[ref[1]] if ref[0] == "source" else results[ref[1]]
+            if use_order and o and not b.order:
+                b = b.with_order(o)
+            ins.append(b)
+        out = execute_stage(st, ins, use_kernels, use_order)
         results.append(M.compact_to_estimate(out, st.top, stats_memo,
                                              compact_slack, scale))
     return results[-1]
@@ -372,10 +531,11 @@ class CacheStats:
 class ExecutableCache:
     """LRU cache of jitted pipeline executables.
 
-    Key: `(semantic_key(flow), per-source (name, schema signature, capacity
-    bucket), use_kernels, compact_slack)`.  `traces` counts actual jit
-    traces (incremented from inside the traced body), so tests can assert
-    warm calls never re-trace.
+    Key: `(semantic_key(flow), stage order signature, per-source (name,
+    schema signature, capacity bucket, runtime order), use_kernels,
+    compact_slack, use_order, donate)`.  `traces` counts actual jit traces
+    (incremented from inside the traced body), so tests can assert warm
+    calls never re-trace.
     """
 
     def __init__(self, maxsize: int = 256):
@@ -432,21 +592,34 @@ class CompiledPlan:
     `run(bindings)` binds RecordBatches (padding each source to its
     capacity bucket), fetches-or-traces the jitted executable for the
     resulting shape signature, executes, and returns a RecordBatch.
+
+    `bind_device(bindings)` / `run_device(masked)` split the host round trip
+    out of the serving loop: bind once (or bind fresh batches as they
+    arrive), keep every masked batch — inputs AND outputs — on device.
     """
 
     flow: Node
     stages: tuple
     use_kernels: bool = False
     compact_slack: float = 2.0
+    use_order: bool = True
     cache: ExecutableCache = dataclasses.field(default_factory=executable_cache)
 
     def __post_init__(self):
         self._sources = {n.name: n for n in self.flow.iter_nodes()
                          if isinstance(n, Source)}
-        self._sem = semantic_key(self.flow)
+        self._sem = _Interned((semantic_key(self.flow),
+                               _order_sig(self.stages)))
+        # static per-source schema signatures, computed once: stringifying
+        # dtypes per call costs more than the warm serving step itself
+        self._ssig = {name: _schema_sig(src.out_schema)
+                      for name, src in self._sources.items()}
 
     # -- binding -------------------------------------------------------------
     def _bind(self, bindings: Mapping[str, RecordBatch]):
+        """Pad each source batch to its capacity bucket and stage everything
+        onto the device in ONE batched transfer (per-column device_puts cost
+        a dispatch each — measurable at serving rates)."""
         masked: dict[str, M.MaskedBatch] = {}
         sig = []
         for name in sorted(self._sources):
@@ -455,19 +628,54 @@ class CompiledPlan:
                 raise KeyError(f"no binding for source {name!r}")
             b = bindings[name].to_numpy().compact().project(
                 list(src.out_schema.fields))
-            cap = M.bucket_capacity(max(b.capacity, 1))
-            masked[name] = M.MaskedBatch.from_record_batch(b, cap)
-            sig.append((name, _schema_sig(src.out_schema), cap))
-        return masked, tuple(sig)
+            n = b.capacity
+            cap = M.bucket_capacity(max(n, 1))
+            cols = {}
+            for f in b.fields:
+                v = np.asarray(b.columns[f])
+                # canonicalize host-side (device_put, unlike jnp.asarray,
+                # would keep int64/float64 even under disabled x64)
+                v = v.astype(jax.dtypes.canonicalize_dtype(v.dtype),
+                             copy=False)
+                if cap != n:
+                    pad = np.zeros((cap - n,) + v.shape[1:], dtype=v.dtype)
+                    v = np.concatenate([v, pad])
+                cols[f] = v
+            order = M.order_prefix(src.sorted_on or (), b.fields) \
+                if self.use_order else ()
+            masked[name] = M.MaskedBatch(cols, np.arange(cap) < n, order)
+            sig.append((name, self._ssig[name], cap, order))
+        return jax.device_put(masked), tuple(sig)
+
+    def bind_device(self, bindings: Mapping[str, RecordBatch]
+                    ) -> dict[str, M.MaskedBatch]:
+        """Host batches -> device-resident masked batches (order attached
+        from `Source.sorted_on`), ready for `run_device`."""
+        return self._bind(bindings)[0]
+
+    def _masked_sig(self, masked: Mapping[str, M.MaskedBatch]):
+        out: dict[str, M.MaskedBatch] = {}
+        sig = []
+        for name in sorted(self._sources):
+            src = self._sources[name]
+            if name not in masked:
+                raise KeyError(f"no binding for source {name!r}")
+            b = masked[name]
+            if self.use_order and src.sorted_on and not b.order:
+                b = b.with_order(tuple(src.sorted_on))
+            out[name] = b
+            sig.append((name, self._ssig[name], b.capacity, b.order))
+        return out, tuple(sig)
 
     # -- executable lookup ---------------------------------------------------
-    def _executable(self, source_sig: tuple):
-        key = (self._sem, source_sig, self.use_kernels, self.compact_slack)
+    def _executable(self, source_sig: tuple, donate: bool = False):
+        key = (self._sem, source_sig, self.use_kernels, self.compact_slack,
+               self.use_order, donate)
         fn = self.cache.get(key)
         if fn is None:
             stages, use_kernels = self.stages, self.use_kernels
             slack, cache = self.compact_slack, self.cache
-            stats_memo: dict = {}
+            use_order = self.use_order
 
             flow = self.flow
 
@@ -476,10 +684,35 @@ class CompiledPlan:
                 if not stages:
                     (only,) = mb.values()
                     return only
+                # runtime re-estimation: price compaction capacities at the
+                # scale of the batches actually bound, not the declared
+                # deployment scale (capacities are static per executable)
+                stats_memo = seed_source_stats(
+                    flow, {n: b.capacity for n, b in mb.items()}, {})
                 return run_stages(stages, mb, use_kernels, slack, stats_memo,
-                                  scale=M.cardinality_scale(flow, mb))
+                                  use_order=use_order)
 
-            fn = jax.jit(_body)
+            # donation lets XLA alias the (padded) input buffers for scratch
+            # and outputs — safe whenever the caller hands over ownership, as
+            # `run` does with its freshly bound batches
+            jfn = jax.jit(_body, donate_argnums=(0,) if donate else ())
+            if donate:
+                # source columns that alias no output raise a benign
+                # per-trace notice; keep donation (it pays for the columns
+                # that DO alias) and silence the notice on the cold call only
+                cold = [True]
+
+                def fn(mb):
+                    if cold[0]:
+                        cold[0] = False
+                        with warnings.catch_warnings():
+                            warnings.filterwarnings(
+                                "ignore",
+                                message="Some donated buffers were not usable")
+                            return jfn(mb)
+                    return jfn(mb)
+            else:
+                fn = jfn
             self.cache.put(key, fn)
         return fn
 
@@ -487,20 +720,30 @@ class CompiledPlan:
     def run(self, bindings: Mapping[str, RecordBatch]) -> RecordBatch:
         """Execute on fresh source batches; warm-cache calls do not retrace."""
         masked, sig = self._bind(bindings)
-        return self._executable(sig)(masked).to_record_batch()
+        return self._executable(sig, donate=True)(masked).to_record_batch()
+
+    def run_device(self, masked_bindings: Mapping[str, M.MaskedBatch],
+                   donate: bool = False) -> M.MaskedBatch:
+        """Device-resident serving step: masked batches in, masked batch out,
+        no host transfer and no re-binding.  Dispatch is asynchronous — the
+        caller chains further device work (or blocks when it must read).
+        Pass `donate=True` only when the input batches are not reused."""
+        masked, sig = self._masked_sig(masked_bindings)
+        return self._executable(sig, donate=donate)(masked)
 
     def run_masked(self, masked_bindings: Mapping[str, M.MaskedBatch]
                    ) -> M.MaskedBatch:
         """Traceable entry point: execute on already-masked batches (for
         embedding a compiled flow inside a larger jitted program)."""
-        stats_memo: dict = {}
         if not self.stages:
             (only,) = masked_bindings.values()
             return only
-        return run_stages(self.stages, masked_bindings, self.use_kernels,
+        masked, _ = self._masked_sig(masked_bindings)
+        stats_memo = seed_source_stats(
+            self.flow, {n: b.capacity for n, b in masked.items()}, {})
+        return run_stages(self.stages, masked, self.use_kernels,
                           self.compact_slack, stats_memo,
-                          scale=M.cardinality_scale(self.flow,
-                                                    masked_bindings))
+                          use_order=self.use_order)
 
     def cache_stats(self) -> CacheStats:
         return self.cache.stats()
@@ -508,11 +751,15 @@ class CompiledPlan:
 
 def compile_plan(flow_or_plan, use_kernels: bool = False,
                  compact_slack: float = 2.0,
-                 cache: Optional[ExecutableCache] = None) -> CompiledPlan:
-    """Lower a logical flow (or the logical tree of a PhysPlan) into a
-    `CompiledPlan` ready for repeated execution."""
-    flow = flow_or_plan.node if isinstance(flow_or_plan, PhysPlan) \
-        else flow_or_plan
-    return CompiledPlan(flow=flow, stages=lower(flow),
+                 cache: Optional[ExecutableCache] = None,
+                 use_order: bool = True) -> CompiledPlan:
+    """Lower a logical flow — or a `PhysPlan`, whose shipping strategies and
+    physical `Props` then thread into the stages — into a `CompiledPlan`
+    ready for repeated execution."""
+    if isinstance(flow_or_plan, PhysPlan):
+        flow, stages = flow_or_plan.node, lower_phys(flow_or_plan)
+    else:
+        flow, stages = flow_or_plan, lower(flow_or_plan)
+    return CompiledPlan(flow=flow, stages=stages,
                         use_kernels=use_kernels, compact_slack=compact_slack,
-                        cache=cache or _CACHE)
+                        use_order=use_order, cache=cache or _CACHE)

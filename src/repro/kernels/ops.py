@@ -94,10 +94,15 @@ def segment_reduce(values: jnp.ndarray, segment_ids: jnp.ndarray,
 class KernelSegmentOps(SegmentOps):
     """SegmentOps backed by the Pallas segmented-scan kernel (sorted ids)."""
 
-    def __init__(self, segment_ids, num_segments: int, record_valid=None):
+    def __init__(self, segment_ids, num_segments: int, record_valid=None,
+                 is_start=None):
         self.segment_ids = segment_ids.astype(jnp.int32)
         self.num_segments = int(num_segments)
         self.record_valid = record_valid
+        # first valid row of each segment, precomputed by the masked executor
+        # (required for order-elided inputs, where valid rows have gaps and
+        # segment-id transitions no longer locate group starts)
+        self.is_start = is_start
 
     def _reduce(self, values, op):
         out = segment_reduce(jnp.asarray(values), self.segment_ids,
@@ -129,9 +134,13 @@ class KernelSegmentOps(SegmentOps):
     def first(self, values):
         v = jnp.asarray(values)
         sid = self.segment_ids
-        is_start = jnp.concatenate([jnp.ones(1, bool), sid[1:] != sid[:-1]])
-        if self.record_valid is not None:
-            is_start = is_start & self.record_valid
+        if self.is_start is not None:
+            is_start = self.is_start
+        else:
+            is_start = jnp.concatenate([jnp.ones(1, bool),
+                                        sid[1:] != sid[:-1]])
+            if self.record_valid is not None:
+                is_start = is_start & self.record_valid
         rows = jnp.where(is_start, sid, self.num_segments)
         out = jnp.zeros((self.num_segments,), v.dtype)
         return out.at[rows].set(jnp.where(is_start, v, 0), mode="drop")

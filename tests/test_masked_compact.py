@@ -1,0 +1,98 @@
+"""Property tests for the prefix-sum masked compaction (DESIGN.md §8).
+
+`MaskedBatch.compact` is load-bearing for order-aware execution: it must
+keep exactly the valid rows (up to capacity), in their original relative
+order (STABILITY — what lets `order` metadata survive stage boundaries),
+across shrink / same-size / grow targets on the bucket ladder.  Seeded
+sweeps in the style of tests/test_prune.py; no hypothesis dependency.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.masked import MaskedBatch, bucket_capacity, order_prefix
+
+SEEDS = range(12)
+
+
+def _random_batch(rng, cap, valid_frac, sort_col=False):
+    a = rng.integers(-1000, 1000, cap)
+    if sort_col:
+        a = np.sort(a)
+    cols = {
+        "a": jnp.asarray(a),
+        "b": jnp.asarray(rng.integers(-5, 5, cap)),
+        "f": jnp.asarray(rng.uniform(-1, 1, cap).astype(np.float32)),
+    }
+    valid = rng.random(cap) < valid_frac
+    return MaskedBatch(cols, jnp.asarray(valid),
+                       order=("a",) if sort_col else ())
+
+
+def _valid_rows(b: MaskedBatch):
+    v = np.asarray(b.valid)
+    return [tuple(np.asarray(b.columns[f])[v].tolist())
+            for f in sorted(b.columns)]
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_compact_preserves_valid_rows_and_is_stable(seed):
+    rng = np.random.default_rng(seed)
+    cap = int(rng.choice([8, 64, 256, 1024]))
+    b = _random_batch(rng, cap, valid_frac=float(rng.uniform(0, 1)))
+    nv = int(np.asarray(b.valid).sum())
+    target = bucket_capacity(max(nv, 1))
+    c = b.compact(target)
+    assert c.capacity == target
+    # exact same row sequence (not just multiset: stability) per column
+    before = _valid_rows(b)
+    after = _valid_rows(c)
+    assert after == [col[:target] for col in before]
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("target", ["shrink", "same", "grow"])
+def test_compact_across_capacity_buckets(seed, target):
+    rng = np.random.default_rng(seed)
+    cap = 128
+    b = _random_batch(rng, cap, valid_frac=0.3)
+    nv = int(np.asarray(b.valid).sum())
+    newcap = {"shrink": max(bucket_capacity(max(nv, 1)), 8),
+              "same": cap, "grow": 4 * cap}[target]
+    c = b.compact(newcap)
+    assert c.capacity == newcap
+    assert int(np.asarray(c.valid).sum()) == min(nv, newcap)
+    # valid rows form a prefix after compaction
+    v = np.asarray(c.valid)
+    assert not v[min(nv, newcap):].any()
+    assert v[:min(nv, newcap)].all()
+    assert _valid_rows(c) == [col[:newcap] for col in _valid_rows(b)]
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_compact_preserves_order_metadata_and_sortedness(seed):
+    rng = np.random.default_rng(seed)
+    b = _random_batch(rng, 256, valid_frac=0.4, sort_col=True)
+    c = b.compact(128)
+    assert c.order == ("a",)
+    av = np.asarray(c.columns["a"])[np.asarray(c.valid)]
+    assert (np.diff(av) >= 0).all(), "stable compact must keep sortedness"
+
+
+def test_compact_truncation_keeps_first_rows():
+    # documented contract: a too-small capacity drops the TAIL valid rows
+    cols = {"a": jnp.arange(16)}
+    b = MaskedBatch(cols, jnp.ones(16, bool))
+    c = b.compact(8)
+    assert np.asarray(c.valid).all()
+    assert np.asarray(c.columns["a"]).tolist() == list(range(8))
+
+
+def test_order_prefix_breaks_on_write_and_projection():
+    assert order_prefix(("a", "b", "c"), {"a", "b", "c"}) == ("a", "b", "c")
+    assert order_prefix(("a", "b", "c"), {"a", "c"}) == ("a",)
+    assert order_prefix(("a", "b"), {"a", "b"}, writes={"b"}) == ("a",)
+    assert order_prefix(("a", "b"), {"a", "b"}, writes={"a"}) == ()
