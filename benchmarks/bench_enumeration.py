@@ -14,6 +14,8 @@ trajectory is tracked from PR 1 on.
 
 from __future__ import annotations
 
+import contextlib
+import gc
 import time
 
 from repro.configs import flows
@@ -25,12 +27,28 @@ from repro.core.physical import Ctx
 TWO_PHASE_LIMIT = 6000
 
 
+@contextlib.contextmanager
+def _gc_quiesced():
+    """Flush pending garbage and pause the collector around a single-shot
+    timing.  A generational gen-2 pass scans the entire live heap — with
+    jax imported that is tens of ms, longer than the small flows' whole
+    measurement — and WHERE it fires depends on allocation counts from
+    unrelated module imports, so rates would jump on unrelated PRs."""
+    gc.collect()
+    gc.disable()
+    try:
+        yield
+    finally:
+        gc.enable()
+
+
 def _time_flow(name: str, root, ctx: Ctx, include_commutes: bool,
                max_plans: int = 500_000, compare: bool = True) -> dict:
-    t0 = time.perf_counter()
-    res = optimize(root, ctx, max_plans=max_plans,
-                   include_commutes=include_commutes)
-    opt_ms = (time.perf_counter() - t0) * 1e3
+    with _gc_quiesced():
+        t0 = time.perf_counter()
+        res = optimize(root, ctx, max_plans=max_plans,
+                       include_commutes=include_commutes)
+        opt_ms = (time.perf_counter() - t0) * 1e3
     row = {
         "flow": name,
         "plans": res.num_enumerated,
@@ -41,10 +59,11 @@ def _time_flow(name: str, root, ctx: Ctx, include_commutes: bool,
         "best_cost": res.best.cost,
     }
     if compare and res.num_enumerated <= TWO_PHASE_LIMIT:
-        t0 = time.perf_counter()
-        ref = optimize_two_phase(root, ctx, max_plans=max_plans,
-                                 include_commutes=include_commutes)
-        two_ms = (time.perf_counter() - t0) * 1e3
+        with _gc_quiesced():
+            t0 = time.perf_counter()
+            ref = optimize_two_phase(root, ctx, max_plans=max_plans,
+                                     include_commutes=include_commutes)
+            two_ms = (time.perf_counter() - t0) * 1e3
         assert ref.best.flow.op_names() == res.best.flow.op_names(), name
         assert abs(ref.best.cost - res.best.cost) <= 1e-9, name
         row["two_phase_ms"] = round(two_ms, 2)

@@ -11,13 +11,17 @@ Compares the quick-run artifacts (BENCH_<name>.quick.json — produced by
     pipeline:    warm-cache batches/sec per flow
     aggregation: shuffled-row reduction factor per flow
 
-Rows are matched by flow name; rows present in only one file are skipped
-(quick runs cover a subset of the full sweep).  The committed pipeline
-baseline must additionally show the fused pipeline >= `min-speedup` x the
-per-operator jit path on the map-chain flow (the fusion acceptance bar),
-and BOTH aggregation artifacts must show the combiner inserted with
->= `min-shuffle-reduction` x fewer rows crossing the repartition (the
-aggregation push-down acceptance bar).
+Rows are matched by flow name.  Every gate declares the flows its QUICK
+artifact must contain (defaulting to everything in the committed baseline;
+enumeration's quick run is a declared subset of the full sweep): a gated
+flow missing from the candidate JSON, or a gated metric missing from a
+present row, FAILS the gate loudly — a vanished key must never silently
+shrink the comparison to whatever happens to be there.  The committed
+pipeline baseline must additionally show the fused pipeline >=
+`min-speedup` x the per-operator jit path on the map-chain flow (the
+fusion acceptance bar), and BOTH aggregation artifacts must show the
+combiner inserted with >= `min-shuffle-reduction` x fewer rows crossing
+the repartition (the aggregation push-down acceptance bar).
 
 Order-aware serving bar: in BOTH pipeline artifacts, the device-resident
 serving rate must beat eager numpy execution on every serving flow
@@ -32,6 +36,7 @@ them without code changes:
     BENCH_MIN_FUSION_SPEEDUP       map-chain speedup floor       (default 3.0)
     BENCH_MIN_SHUFFLE_REDUCTION    aggregation reduction floor   (default 3.0)
     BENCH_MIN_PIPELINE_VS_EAGER    serving-vs-eager rate floor   (default 1.0)
+    BENCH_MIN_ADAPTIVE_RECOVERY    post-swap/oracle rate floor   (default 0.8)
 """
 
 from __future__ import annotations
@@ -43,11 +48,22 @@ import sys
 
 from .run import baseline_path
 
-# bench name -> (row list key, rate metric within a row)
+# the flows bench_enumeration's --quick run produces: its full sweep is
+# deliberately larger, so the quick requirement is declared rather than
+# derived from the baseline
+_QUICK_ENUM_FLOWS = frozenset((
+    "q7", "q15", "clickstream", "textmining",
+    "map-chain-3", "map-chain-4", "map-chain-5", "map-chain-6",
+    "chain-join-4", "chain-join-5", "chain-join-6",
+    "star-join-4", "star-join-5"))
+
+# bench name -> (row list key, rate metric within a row, flows the QUICK
+# artifact must contain — None means every flow of the committed baseline)
 GATES = {
-    "enumeration": ("rows", "plans_per_s"),
-    "pipeline": ("rows", "pipeline_bps"),
-    "aggregation": ("rows", "reduction_factor"),
+    "enumeration": ("rows", "plans_per_s", _QUICK_ENUM_FLOWS),
+    "pipeline": ("rows", "pipeline_bps", None),
+    "aggregation": ("rows", "reduction_factor", None),
+    "adaptive": ("rows", "post_bps", None),
 }
 
 
@@ -61,7 +77,7 @@ def _rows_by_flow(doc: dict, rows_key: str) -> dict:
 
 
 def check_bench(name: str, factor: float, errors: list[str]) -> int:
-    rows_key, metric = GATES[name]
+    rows_key, metric, required = GATES[name]
     base_path = baseline_path(name, quick=False)
     quick_path = baseline_path(name, quick=True)
     if not os.path.exists(base_path):
@@ -73,12 +89,30 @@ def check_bench(name: str, factor: float, errors: list[str]) -> int:
         return 0
     base = _rows_by_flow(_load(base_path), rows_key)
     quick = _rows_by_flow(_load(quick_path), rows_key)
+    # a gated flow absent from the candidate must FAIL, not silently shrink
+    # the comparison — a renamed or crashed-out flow is a real regression
+    req = set(base) if required is None else set(required)
+    missing = sorted(req - set(quick))
+    if missing:
+        errors.append(f"{name}: quick result missing gated flow(s) "
+                      f"{missing} — cannot skip silently")
     compared = 0
     for flow in sorted(set(base) & set(quick)):
         if base[flow].get("rows") != quick[flow].get("rows"):
-            # rates are only comparable on identical per-batch data sizes
-            print(f"skip {name}/{flow}: rows {quick[flow].get('rows')} "
-                  f"!= baseline rows {base[flow].get('rows')}")
+            # rates are only comparable on identical per-batch data sizes:
+            # a size change requires regenerating the committed baseline in
+            # the same change, so a mismatch is a loud failure, not a skip
+            errors.append(
+                f"{name}/{flow}: quick rows {quick[flow].get('rows')} != "
+                f"baseline rows {base[flow].get('rows')} — regenerate the "
+                "committed baseline for the new batch size")
+            continue
+        absent = [tag for tag, row in (("baseline", base[flow]),
+                                       ("quick", quick[flow]))
+                  if metric not in row]
+        if absent:
+            errors.append(f"{name}/{flow}: metric {metric!r} missing from "
+                          f"{' and '.join(absent)} row(s)")
             continue
         b, q = base[flow][metric], quick[flow][metric]
         compared += 1
@@ -113,7 +147,13 @@ def check_pipeline_vs_eager(floor: float, errors: list[str]) -> None:
             if row is None:
                 errors.append(f"pipeline[{tag}]: missing flow {flow!r}")
                 continue
-            pipe, eager = row.get("pipeline_bps", 0), row.get("eager_bps", 0)
+            pipe, eager = row.get("pipeline_bps"), row.get("eager_bps")
+            if pipe is None or eager is None:
+                # a vanished metric must not default the bar to 0 (always
+                # passing) — same loud-failure contract as check_bench
+                errors.append(f"pipeline[{tag}]/{flow}: missing "
+                              "pipeline_bps/eager_bps metric")
+                continue
             if pipe < eager * floor:
                 errors.append(
                     f"pipeline[{tag}]/{flow}: pipeline_bps {pipe:.4g} below "
@@ -167,6 +207,30 @@ def check_aggregation_floor(min_reduction: float, errors: list[str]) -> None:
                   f">= {min_reduction}, combiner inserted on every flow")
 
 
+def check_adaptive_recovery(floor: float, errors: list[str]) -> None:
+    """Acceptance bar (DESIGN.md §9): on the drifted workload the adaptive
+    serve loop must actually swap plans and recover >= `floor` of the
+    oracle plan's throughput, in BOTH the baseline and the quick run."""
+    for quick in (False, True):
+        path = baseline_path("adaptive", quick=quick)
+        if not os.path.exists(path):
+            return  # already reported by check_bench
+        tag = "quick" if quick else "baseline"
+        doc = _load(path)
+        n_before = len(errors)
+        rec = doc.get("recovery")
+        if rec is None or rec < floor:
+            errors.append(f"adaptive[{tag}]: post-swap recovery {rec} below "
+                          f"floor {floor}")
+        for row in doc.get("rows", []):
+            if not row.get("swaps"):
+                errors.append(f"adaptive[{tag}]/{row.get('flow')}: drift "
+                              "never triggered a plan swap")
+        if len(errors) == n_before:
+            print(f"ok adaptive[{tag}]: recovery {rec} >= {floor}, "
+                  "swap observed")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--factor", type=float, default=float(
@@ -181,6 +245,9 @@ def main() -> None:
     ap.add_argument("--min-pipeline-vs-eager", type=float, default=float(
         os.environ.get("BENCH_MIN_PIPELINE_VS_EAGER", "1.0")),
         help="required device-resident-serving vs eager rate floor")
+    ap.add_argument("--min-adaptive-recovery", type=float, default=float(
+        os.environ.get("BENCH_MIN_ADAPTIVE_RECOVERY", "0.8")),
+        help="required post-swap vs oracle-plan throughput floor")
     args = ap.parse_args()
 
     errors: list[str] = []
@@ -189,6 +256,7 @@ def main() -> None:
     check_fusion_floor(args.min_speedup, errors)
     check_aggregation_floor(args.min_shuffle_reduction, errors)
     check_pipeline_vs_eager(args.min_pipeline_vs_eager, errors)
+    check_adaptive_recovery(args.min_adaptive_recovery, errors)
 
     if errors:
         print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)

@@ -5,16 +5,25 @@ Records Emitted per UDF Call", "Number of Distinct Values per Key-Set",
 PK/FK knowledge, CPU cost per call) drive recursive cardinality estimates.
 Where a hint is missing, defaults are derived from the SCA-detected emission
 cardinality class — the black-box analogue of textbook selectivity defaults.
+
+Adaptive statistics feedback (DESIGN.md §9): the paper's hints are static
+compiler guesses, but the fused runtime computes every stage's valid-row
+count for free (the compaction prefix sum).  `StatsStore` accumulates those
+observations per flow; `calibrate_hints` converts them into posterior hints
+(confidence-weighted in log space, quantized onto a geometric grid so one
+calibration REGIME maps to one executable-cache identity); `drift_score`
+compares observed against priced per-stage rows so the serving handle can
+re-optimize only under sustained drift.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Mapping, Optional, Sequence
 
-from .operators import (CoGroupOp, CrossOp, MapOp, MatchOp, Node, ReduceOp,
-                        Source, struct_id)
+from .operators import (CoGroupOp, CrossOp, Hints, MapOp, MatchOp, Node,
+                        ReduceOp, Source, struct_id)
 from .udf import Card, KatEmit
 
 # Selectivity defaults by detected cardinality class
@@ -168,3 +177,380 @@ def sort_flops(rows: float) -> float:
     """Comparison-sort work estimate for local sort strategies."""
     r = max(rows, 2.0)
     return 16.0 * r * math.log2(r)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive statistics feedback (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class StageObs:
+    """Accumulated observations of one fused stage's boundary cardinalities.
+
+    Cumulative sums back confidence weighting (how much evidence exists);
+    the EWMAs are what calibration and drift scoring read, so a shifted
+    workload re-converges within ~1/alpha batches instead of being anchored
+    to the all-time mean.  `groups` carries the KAT/Match side-channel
+    (observed group count / PK-probe hits); None until first observed."""
+
+    rows_in: tuple = ()
+    rows_out: float = 0.0
+    groups: Optional[float] = None
+    batches: int = 0
+    ewma_in: tuple = ()
+    ewma_out: float = 0.0
+    ewma_groups: Optional[float] = None
+    last_tick: int = 0
+
+
+def _ewma(old: float, new: float, alpha: float, first: bool) -> float:
+    return float(new) if first else (1.0 - alpha) * old + alpha * float(new)
+
+
+class StatsStore:
+    """Per-flow accumulator of observed stage-boundary cardinalities.
+
+    Stage keys are tuples of operator NAMES (the ops fused into the stage,
+    bottom-up) — names survive reordering rewrites, so observations made
+    under one plan still calibrate the hints of every equivalent plan.
+    `tick()` stamps one served batch; recency filters (`newer_than`) let the
+    drift check judge only observations made under the current plan.
+    """
+
+    def __init__(self, alpha: float = 0.25):
+        self.alpha = alpha
+        self._stages: dict[tuple, StageObs] = {}
+        self._sources: dict[str, StageObs] = {}
+        self._tick = 0
+
+    # -- recording -----------------------------------------------------------
+    def tick(self) -> int:
+        """Advance the batch clock (call once per observed batch)."""
+        self._tick += 1
+        return self._tick
+
+    @property
+    def clock(self) -> int:
+        return self._tick
+
+    def observe_source(self, name: str, rows: float) -> None:
+        o = self._sources.setdefault(name, StageObs())
+        first = o.batches == 0
+        o.rows_out += float(rows)
+        o.batches += 1
+        o.ewma_out = _ewma(o.ewma_out, rows, self.alpha, first)
+        o.last_tick = self._tick
+
+    def observe_stage(self, names: tuple, rows_in: Sequence[float],
+                      rows_out: float, groups: Optional[float] = None,
+                      snap: bool = False) -> None:
+        """Record one batch's boundary counts for the stage `names`.
+
+        `snap=True` overwrites the EWMAs instead of blending — used when a
+        count is KNOWN to supersede history (a truncation was detected, so
+        the pre-compaction count is the ground truth the next capacity must
+        clear, not a noisy sample to average in)."""
+        o = self._stages.setdefault(tuple(names), StageObs())
+        first = o.batches == 0 or snap
+        rows_in = tuple(float(r) for r in rows_in)
+        if len(o.rows_in) != len(rows_in):
+            o.rows_in = (0.0,) * len(rows_in)
+            o.ewma_in = rows_in
+        o.rows_in = tuple(a + b for a, b in zip(o.rows_in, rows_in))
+        o.rows_out += float(rows_out)
+        o.batches += 1
+        o.ewma_in = tuple(_ewma(a, b, self.alpha, first)
+                          for a, b in zip(o.ewma_in, rows_in))
+        o.ewma_out = _ewma(o.ewma_out, rows_out, self.alpha, first)
+        if groups is not None:
+            o.groups = (o.groups or 0.0) + float(groups)
+            o.ewma_groups = _ewma(o.ewma_groups or 0.0, groups, self.alpha,
+                                  first or o.ewma_groups is None)
+        o.last_tick = self._tick
+
+    # -- reading ---------------------------------------------------------
+    def stages(self):
+        return self._stages.items()
+
+    def stage(self, names: tuple) -> Optional[StageObs]:
+        return self._stages.get(tuple(names))
+
+    def source_rows(self) -> dict:
+        """{source name: EWMA of observed valid rows per batch}."""
+        return {n: o.ewma_out for n, o in self._sources.items()}
+
+    def __len__(self) -> int:
+        return len(self._stages)
+
+    def clear(self) -> None:
+        self._stages.clear()
+        self._sources.clear()
+        self._tick = 0
+
+    # -- cross-shard / cross-worker combination --------------------------
+    def merge(self, other: "StatsStore") -> None:
+        """Fold another store's observations in (sums add; EWMAs combine
+        weighted by batch counts, so a shard that saw more batches carries
+        proportionally more weight).  Used to aggregate per-worker stores;
+        `execute_distributed` itself psums counts across shards so a single
+        global observation lands here per executed batch."""
+
+        def fold(mine: dict, theirs: dict):
+            for k, o in theirs.items():
+                m = mine.get(k)
+                if m is None:
+                    mine[k] = dataclasses.replace(o)
+                    continue
+                tb = m.batches + o.batches
+                if len(m.rows_in) != len(o.rows_in):
+                    pad = max(len(m.rows_in), len(o.rows_in))
+                    m.rows_in += (0.0,) * (pad - len(m.rows_in))
+                    m.ewma_in += (0.0,) * (pad - len(m.ewma_in))
+                    o = dataclasses.replace(
+                        o, rows_in=o.rows_in + (0.0,) * (pad - len(o.rows_in)),
+                        ewma_in=o.ewma_in + (0.0,) * (pad - len(o.ewma_in)))
+                wm, wo = m.batches / tb, o.batches / tb
+                m.ewma_in = tuple(a * wm + b * wo
+                                  for a, b in zip(m.ewma_in, o.ewma_in))
+                m.ewma_out = m.ewma_out * wm + o.ewma_out * wo
+                if o.ewma_groups is not None:
+                    m.ewma_groups = (o.ewma_groups if m.ewma_groups is None
+                                     else m.ewma_groups * wm + o.ewma_groups * wo)
+                    m.groups = (m.groups or 0.0) + (o.groups or 0.0)
+                m.rows_in = tuple(a + b for a, b in zip(m.rows_in, o.rows_in))
+                m.rows_out += o.rows_out
+                m.batches = tb
+                m.last_tick = max(m.last_tick, o.last_tick)
+
+        fold(self._stages, other._stages)
+        fold(self._sources, other._sources)
+        self._tick = max(self._tick, other._tick)
+
+
+def _quantize_log2(x: float, quant: int) -> float:
+    """Snap `x` onto the geometric grid 2^(k/quant).  Posterior hints live on
+    this grid, so noisy-but-stationary observations keep mapping to the SAME
+    hints — the calibration REGIME is discrete, the semantic cache key is
+    stable, and a re-plan is only triggered by a real distribution move."""
+    if x <= 0.0:
+        return x
+    return float(2.0 ** (round(math.log2(x) * quant) / quant))
+
+
+def _blend(prior: Optional[float], observed: float, batches: int,
+           prior_weight: float) -> float:
+    """Confidence-weighted geometric interpolation between the compiler hint
+    and the observation: `prior_weight` is the hint's worth in pseudo-batches
+    (0 trusts observations outright — the right setting once a swap trigger
+    has already statistically confirmed the drift)."""
+    observed = max(observed, 1e-9)
+    if prior is None or prior <= 0.0 or prior_weight <= 0.0:
+        return observed
+    w = batches / (batches + prior_weight)
+    return math.exp(w * math.log(observed) + (1.0 - w) * math.log(prior))
+
+
+def _stage_expected(nodes: Sequence[Node], rows_in: Sequence[float],
+                    dop: int = 1) -> float:
+    """Output rows one fused stage should produce at the OBSERVED input rows,
+    under the nodes' current hints — `estimate`'s per-node cases applied
+    locally, so upstream estimation error cancels out of the comparison."""
+    top = nodes[-1]
+    in0 = max(rows_in[0], 0.0) if rows_in else 0.0
+    in1 = max(rows_in[1], 0.0) if len(rows_in) > 1 else 0.0
+    if isinstance(top, MapOp):
+        out = in0
+        for n in nodes:
+            out *= _map_selectivity(n)
+        return out
+    h = top.hints
+    if isinstance(top, ReduceOp):
+        groups = float(h.distinct_keys) if h.distinct_keys \
+            else max(1.0, in0 * DEFAULT_GROUPING_FACTOR)
+        groups = min(groups, in0) if in0 else groups
+        if top.combiner:
+            return min(in0, groups * max(dop, 1))
+        ke = top.props.kat_emit
+        gsel = h.group_selectivity if h.group_selectivity is not None \
+            else DEFAULT_GROUP_FILTER_SELECTIVITY
+        if ke in (KatEmit.PASSTHROUGH, None):
+            return in0
+        if ke is KatEmit.PASSTHROUGH_FILTER:
+            return in0 * gsel
+        if ke is KatEmit.PER_GROUP_FILTER:
+            return groups * gsel
+        return groups
+    if isinstance(top, MatchOp):
+        if h.join_fanout is not None:
+            rows = in0 * h.join_fanout
+        elif h.pk_side == "right":
+            rows = in0
+        elif h.pk_side == "left":
+            rows = in1
+        else:
+            dl = max(1.0, in0 * DEFAULT_GROUPING_FACTOR)
+            dr = max(1.0, in1 * DEFAULT_GROUPING_FACTOR)
+            rows = in0 * in1 / max(dl, dr, 1.0)
+        return rows * _map_selectivity_like(top)
+    if isinstance(top, CrossOp):
+        return in0 * in1 * _map_selectivity_like(top)
+    if isinstance(top, CoGroupOp):
+        return float(h.distinct_keys) if h.distinct_keys \
+            else max(1.0, max(in0, in1) * DEFAULT_GROUPING_FACTOR)
+    raise TypeError(type(top).__name__)
+
+
+def _lookup(by_name: Mapping[str, Node], nm: str) -> Optional[Node]:
+    """Resolve a stage-key operator name against a flow, falling back from a
+    split Reduce's halves (`X.pre`/`X.merge`, `reorder.split_reduce` naming)
+    to the unsplit `X` — observations made under a split plan must still
+    calibrate the base flow the next search starts from."""
+    n = by_name.get(nm)
+    if n is None and nm.endswith((".pre", ".merge")):
+        n = by_name.get(nm.rsplit(".", 1)[0])
+    return n
+
+
+def drift_score(root: Node, store: StatsStore, min_rows: float = 8.0,
+                newer_than: int = 0) -> float:
+    """Cheap drift statistic: the worst per-stage |log2(observed / priced)|
+    over recently observed stages, pricing each stage LOCALLY at its observed
+    input rows under `root`'s current hints.  Right after a calibration swap
+    the posterior hints reproduce the EWMAs, so the score collapses toward 0;
+    a stationary workload with honest hints never leaves the hysteresis band.
+    Stages where both sides are below `min_rows` are skipped — tiny absolute
+    counts make log-ratios pure noise."""
+    by_name = {n.name: n for n in root.iter_nodes()}
+    score = 0.0
+    for names, obs in store.stages():
+        if obs.batches == 0 or obs.last_tick <= newer_than:
+            continue
+        nodes = [by_name.get(nm) for nm in names]
+        if any(n is None for n in nodes):
+            continue  # stale key from a differently fused previous plan
+        exp = _stage_expected(nodes, obs.ewma_in)
+        if max(obs.ewma_out, exp) < min_rows:
+            continue
+        score = max(score, abs(math.log2(max(obs.ewma_out, 0.5)
+                                         / max(exp, 0.5))))
+    return score
+
+
+def calibrate_hints(root: Node, store: StatsStore, prior_weight: float = 4.0,
+                    quant: int = 4, newer_than: int = 0) -> Node:
+    """Rebuild `root` with posterior hints derived from `store`.
+
+    Per observed stage, the observed/prior ratio is absorbed into the hint
+    the estimator actually reads for that operator kind: Map chains split the
+    log-correction evenly over their fused ops' selectivities (only the
+    product is observable — and only the product prices stage boundaries);
+    Reduce/CoGroup get posterior `distinct_keys` (and `group_selectivity`
+    for group filters) from the observed group counts; Match/Cross fold the
+    whole observed fanout into `join_fanout`/`selectivity`.  Posteriors are
+    confidence-blended against the prior (`prior_weight` pseudo-batches) and
+    quantized onto the 2^(1/quant) grid, so the returned flow's
+    `semantic_key` identifies the calibration REGIME: unchanged statistics
+    reproduce the identical flow, and a genuinely shifted workload lands on
+    a new, cache-coexisting identity.  Unobserved operators keep their
+    hints; the tree is rebuilt bottom-up sharing unchanged subtrees.
+    """
+    by_name = {n.name: n for n in root.iter_nodes()}
+    posterior: dict[str, Hints] = {}
+
+    def q(x: float) -> float:
+        return _quantize_log2(x, quant)
+
+    # oldest-first, so when two stage keys resolve to one operator (a stale
+    # fusion grouping plus the current one, or a split Reduce's halves next
+    # to the unsplit base), the FRESHEST observation writes the posterior
+    for names, obs in sorted(store.stages(),
+                             key=lambda kv: kv[1].last_tick):
+        if obs.batches == 0 or obs.last_tick <= newer_than:
+            continue
+        nodes = [_lookup(by_name, nm) for nm in names]
+        if any(n is None for n in nodes):
+            continue
+        top = nodes[-1]
+        rout = max(obs.ewma_out, 0.25)  # zero survivors: tiny, not log(0)
+        in0 = max(obs.ewma_in[0], 1.0) if obs.ewma_in else 1.0
+        in1 = max(obs.ewma_in[1], 1.0) if len(obs.ewma_in) > 1 else 1.0
+        if isinstance(top, MapOp):
+            prior_prod = 1.0
+            for n in nodes:
+                prior_prod *= max(_map_selectivity(n), 1e-9)
+            corr = (math.log(rout / in0) - math.log(prior_prod)) / len(nodes)
+            for n in nodes:
+                seen = _map_selectivity(n) * math.exp(corr)
+                posterior[n.name] = dataclasses.replace(
+                    n.hints, selectivity=q(_blend(
+                        _map_selectivity(n), seen, obs.batches, prior_weight)))
+        elif isinstance(top, ReduceOp):
+            h, new = top.hints, {}
+            # a combiner's output rows ARE its observed per-worker group
+            # count (min(rows, groups·dop) realized), so they calibrate
+            # distinct_keys directly; its recorded `groups` side-channel is
+            # deliberately absent (per-shard counts over-count globally)
+            g_obs = rout if top.combiner else obs.ewma_groups
+            if g_obs is not None:
+                prior_g = float(h.distinct_keys) if h.distinct_keys \
+                    else in0 * DEFAULT_GROUPING_FACTOR
+                # the declared hint speaks for deployment scale; compare at
+                # the serving-batch scale the observation was made at
+                prior_g = min(max(prior_g, 1.0), in0)
+                g = _blend(prior_g, max(g_obs, 1.0), obs.batches,
+                           prior_weight)
+                new["distinct_keys"] = max(1, round(q(g)))
+            ke = top.props.kat_emit
+            groups_obs = max(obs.ewma_groups or 1.0, 1.0)
+            if ke is KatEmit.PASSTHROUGH_FILTER:
+                prior_gs = h.group_selectivity \
+                    if h.group_selectivity is not None \
+                    else DEFAULT_GROUP_FILTER_SELECTIVITY
+                new["group_selectivity"] = min(1.0, q(_blend(
+                    prior_gs, rout / in0, obs.batches, prior_weight)))
+            elif ke is KatEmit.PER_GROUP_FILTER \
+                    and obs.ewma_groups is not None:
+                prior_gs = h.group_selectivity \
+                    if h.group_selectivity is not None \
+                    else DEFAULT_GROUP_FILTER_SELECTIVITY
+                new["group_selectivity"] = min(1.0, q(_blend(
+                    prior_gs, rout / groups_obs, obs.batches, prior_weight)))
+            if new:
+                posterior[top.name] = dataclasses.replace(h, **new)
+        elif isinstance(top, MatchOp):
+            # fold the complete observed fanout (UDF selectivity included)
+            # into join_fanout; selectivity pinned to 1.0 so the estimator
+            # does not apply a second factor on top
+            prior_f = _stage_expected([top], (in0, in1)) / in0
+            f = q(_blend(prior_f, rout / in0, obs.batches, prior_weight))
+            posterior[top.name] = dataclasses.replace(
+                top.hints, join_fanout=f, selectivity=1.0)
+        elif isinstance(top, CrossOp):
+            prior_s = _map_selectivity_like(top)
+            s = q(_blend(prior_s, rout / max(in0 * in1, 1.0), obs.batches,
+                         prior_weight))
+            posterior[top.name] = dataclasses.replace(
+                top.hints, selectivity=s)
+        elif isinstance(top, CoGroupOp):
+            prior_g = float(top.hints.distinct_keys) \
+                if top.hints.distinct_keys \
+                else max(1.0, max(in0, in1) * DEFAULT_GROUPING_FACTOR)
+            g = _blend(min(prior_g, in0 + in1), rout, obs.batches,
+                       prior_weight)
+            posterior[top.name] = dataclasses.replace(
+                top.hints, distinct_keys=max(1, round(q(g))))
+
+    if not posterior:
+        return root
+
+    def rebuild(n: Node) -> Node:
+        kids = [rebuild(c) for c in n.children]
+        changed = any(k is not c for k, c in zip(kids, n.children))
+        h = posterior.get(n.name) if not isinstance(n, Source) else None
+        if not changed and h is None:
+            return n
+        out = n.with_children(*kids) if changed else n
+        if h is not None and h != out.hints:
+            out = dataclasses.replace(out, hints=h)
+        return out
+
+    return rebuild(root)

@@ -148,7 +148,8 @@ def _broadcast(b: M.MaskedBatch, axis: str, p: int) -> M.MaskedBatch:
 def _exec_stages(stages, shards: Mapping[str, M.MaskedBatch],
                  axis: str, p: int, use_kernels: bool,
                  stats_memo: dict, slack: float,
-                 root: Node, use_order: bool = True) -> M.MaskedBatch:
+                 root: Node, use_order: bool = True,
+                 observe: Optional[list] = None) -> M.MaskedBatch:
     from . import pipeline as PL
     from .cost import seed_source_stats
 
@@ -188,8 +189,18 @@ def _exec_stages(stages, shards: Mapping[str, M.MaskedBatch],
             else:
                 raise ValueError(how)
             ins.append(b)
-        results.append(compact(
-            PL.execute_stage(st, ins, use_kernels, use_order), node))
+        obs: Optional[dict] = {} if observe is not None else None
+        out = PL.execute_stage(st, ins, use_kernels, use_order, obs)
+        if observe is not None:
+            # global (cross-shard) boundary counts: per-shard valid rows and
+            # KAT/Match side-channels summed over the mesh axis — the
+            # distributed leg of the adaptive feedback loop (DESIGN.md §9),
+            # aggregated exactly where shuffle_stats counts the wire
+            observe.append((
+                jax.lax.psum(jnp.sum(out.valid.astype(jnp.int32)), axis),
+                jax.lax.psum(obs["groups"], axis)
+                if "groups" in obs else jnp.int32(-1)))
+        results.append(compact(out, node))
     return results[-1]
 
 
@@ -200,13 +211,19 @@ def execute_distributed(plan: PhysPlan, bindings: Mapping[str, RecordBatch],
                         mesh: Optional[Mesh] = None, axis: str = "data",
                         use_kernels: bool = False, slack: float = 4.0,
                         out_capacity: Optional[int] = None,
-                        use_order: bool = True) -> RecordBatch:
+                        use_order: bool = True,
+                        stats_store=None) -> RecordBatch:
     """Execute a physical plan data-parallel over `mesh[axis]`.
 
     Sharding preserves per-shard order for sorted sources: both the
     partitioned-on pre-hash (stable argsort) and the round-robin block split
     keep each shard a stable subsequence of the bound batch, so
-    `Source.sorted_on` elisions stay sound inside `shard_map`."""
+    `Source.sorted_on` elisions stay sound inside `shard_map`.
+
+    With `stats_store` (a `cost.StatsStore`), every stage's GLOBAL boundary
+    counts — per-shard observations psum'd over the mesh axis inside the
+    shard body — are folded into the store, feeding the same adaptive
+    calibration loop the local serving handle uses (DESIGN.md §9)."""
     if mesh is None:
         devs = np.array(jax.devices())
         mesh = Mesh(devs, (axis,))
@@ -255,16 +272,36 @@ def execute_distributed(plan: PhysPlan, bindings: Mapping[str, RecordBatch],
     names = sorted(global_batches)
     in_specs = tuple(jax.tree.map(lambda _: P(axis), global_batches[n])
                      for n in names)
+    out_specs = P(axis) if stats_store is None else (P(axis), P())
 
     @functools.partial(
-        _shard_map, mesh=mesh, in_specs=in_specs, out_specs=P(axis),
+        _shard_map, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         **{_CHECK_KW: False})
     def run(*shards):
         local = dict(zip(names, shards))
+        observe: Optional[list] = None if stats_store is None else []
         if not stages:
-            return local[plan.node.name]
-        return _exec_stages(stages, local, axis, p, use_kernels, stats_memo,
-                            slack, plan.node, use_order)
+            out = local[plan.node.name]
+        else:
+            out = _exec_stages(stages, local, axis, p, use_kernels,
+                               stats_memo, slack, plan.node, use_order,
+                               observe)
+        if stats_store is None:
+            return out
+        # psum'd counts are replicated over the axis, so they leave the
+        # shard body under a replicated out-spec
+        src = {n: jax.lax.psum(jnp.sum(b.valid.astype(jnp.int32)), axis)
+               for n, b in local.items()}
+        obs = {"src": src,
+               "out": tuple(o[0] for o in (observe or ())),
+               "aux": tuple(o[1] for o in (observe or ()))}
+        return out, obs
 
-    out = run(*[global_batches[n] for n in names])
+    res = run(*[global_batches[n] for n in names])
+    if stats_store is None:
+        return res.to_record_batch()
+    out, obs = res
+    obs = jax.device_get(obs)
+    PL.record_batch_obs(stats_store, stages, obs["src"], obs["out"],
+                        obs["aux"])
     return out.to_record_batch()

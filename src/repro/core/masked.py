@@ -238,15 +238,15 @@ def _sort_by_key(b: MaskedBatch, key: Sequence[str]):
     return MaskedBatch(cols, valid, tuple(key)), seg, is_start
 
 
-def compact_to_estimate(b: "MaskedBatch", node: Node, stats_memo: dict,
-                        slack: float, scale: float = 1.0,
-                        shards: int = 1) -> "MaskedBatch":
-    """Compact `b` to the bucketed capacity of `node`'s cardinality estimate
-    (`estimate * slack * scale / shards`, floored at 8) — the single
-    compaction policy shared by the per-op masked walk, the compiled
-    pipeline and the distributed per-shard body.  `shards` doubles as the
-    estimator's degree of parallelism so a combiner's per-shard capacity
-    covers the worst case of every group present on every worker."""
+def planned_capacity(node: Node, stats_memo: dict, slack: float,
+                     scale: float = 1.0, shards: int = 1) -> int:
+    """Bucketed compaction capacity for `node`'s output under the current
+    cardinality estimate (`estimate * slack * scale / shards`, floored at 8).
+    `shards` doubles as the estimator's degree of parallelism so a combiner's
+    per-shard capacity covers the worst case of every group present on every
+    worker.  Exposed separately from `compact_to_estimate` so the observing
+    pipeline can record the capacity each stage was priced at — the
+    reference point for runtime truncation detection (DESIGN.md §9)."""
     est = estimate(node, stats_memo, dop=shards).rows / shards * scale
     # variance guard: actual cardinalities fluctuate ~Poisson around the
     # estimate, so the multiplicative slack alone under-provisions SMALL
@@ -254,7 +254,17 @@ def compact_to_estimate(b: "MaskedBatch", node: Node, stats_memo: dict,
     # (rather than stacking them) keeps worst-case-bound estimates like the
     # combiner's `groups * dop` from being inflated past their bound.
     rows = max(est * slack, est + 4.0 * np.sqrt(max(est, 0.0)))
-    cap = int(min(b.capacity, max(bucket_capacity(rows), 8)))
+    return int(max(bucket_capacity(rows), 8))
+
+
+def compact_to_estimate(b: "MaskedBatch", node: Node, stats_memo: dict,
+                        slack: float, scale: float = 1.0,
+                        shards: int = 1) -> "MaskedBatch":
+    """Compact `b` to `planned_capacity` — the single compaction policy
+    shared by the per-op masked walk, the compiled pipeline and the
+    distributed per-shard body."""
+    cap = min(b.capacity, planned_capacity(node, stats_memo, slack, scale,
+                                           shards))
     return b.compact(cap) if cap < b.capacity else b
 
 
@@ -305,7 +315,12 @@ def _exec_map(op: MapOp, b: MaskedBatch) -> MaskedBatch:
 
 
 def _exec_reduce(op: ReduceOp, b: MaskedBatch, use_kernels: bool,
-                 use_order: bool = True) -> MaskedBatch:
+                 use_order: bool = True,
+                 obs: Optional[dict] = None) -> MaskedBatch:
+    """`obs`, when given, receives the traced observed group count under
+    key "groups" — the stage-boundary statistic the adaptive feedback loop
+    calibrates `distinct_keys` from (DESIGN.md §9).  It costs one reduction
+    over a mask already computed for segment numbering."""
     key = tuple(op.key)
     if use_order and order_covers(b.order, key):
         # input already groups equal keys contiguously: segment directly over
@@ -321,6 +336,8 @@ def _exec_reduce(op: ReduceOp, b: MaskedBatch, use_kernels: bool,
     segops = segcls(seg, nseg, record_valid=sb.valid, is_start=is_start)
     col = invoke.run_kat_udf(op.udf, dict(sb.columns), segops, op.key)
     ngroups = jnp.sum(is_start)
+    if obs is not None:
+        obs["groups"] = ngroups.astype(jnp.int32)
     group_valid = jnp.arange(nseg) < ngroups
     w = eff_writes(op)
 
@@ -382,7 +399,8 @@ def _match_codes(op: MatchOp, lb: MaskedBatch, rb: MaskedBatch):
 
 
 def _exec_match_pk(op: MatchOp, lb: MaskedBatch, rb: MaskedBatch,
-                   use_kernels: bool, use_order: bool = True) -> MaskedBatch:
+                   use_kernels: bool, use_order: bool = True,
+                   obs: Optional[dict] = None) -> MaskedBatch:
     """Equi-join where the right side is unique on its key (PK side): each
     left row matches at most one right row — sorted-search probe.  When the
     PK side is already ordered on its key, the probe runs directly against
@@ -428,6 +446,8 @@ def _exec_match_pk(op: MatchOp, lb: MaskedBatch, rb: MaskedBatch,
         pos = jnp.maximum(pos, first_valid)
     pos = jnp.clip(pos, 0, rb.capacity - 1)
     hit = (rcode[pos] == lcode) & lb.valid & rvalid[pos]
+    if obs is not None:  # observed probe hits (adaptive join-fanout feedback)
+        obs["groups"] = jnp.sum(hit.astype(jnp.int32))
 
     gathered = {f: v[pos] for f, v in rcols.items()}
     col = invoke.run_pair_udf(op.udf, dict(lb.columns), gathered)
@@ -472,7 +492,8 @@ def _exec_cross(op, lb: MaskedBatch, rb: MaskedBatch,
 
 
 def _exec_cogroup(op: CoGroupOp, lb: MaskedBatch, rb: MaskedBatch,
-                  use_kernels: bool, use_order: bool = True) -> MaskedBatch:
+                  use_kernels: bool, use_order: bool = True,
+                  obs: Optional[dict] = None) -> MaskedBatch:
     """Align both sides on the union key domain with static shapes."""
     nl, nr = lb.capacity, rb.capacity
     # joint sort of all keys to build dense codes over the union domain
@@ -494,6 +515,8 @@ def _exec_cogroup(op: CoGroupOp, lb: MaskedBatch, rb: MaskedBatch,
     lseg, rseg = seg_all[:nl], seg_all[nl:]
     nseg = nl + nr
     ngroups = jnp.sum(is_start)
+    if obs is not None:
+        obs["groups"] = ngroups.astype(jnp.int32)
     group_valid = jnp.arange(nseg) < ngroups
 
     # Per-side segment-sorted order (first()/group scans need contiguity).

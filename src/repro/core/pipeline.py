@@ -50,6 +50,16 @@ the fused pipeline beats eager execution outright (bench_pipeline's
 
 The same lowering drives `distributed.execute_distributed`: per-shard local
 work executes the fused stages, with shipping collectives at stage inputs.
+
+Adaptive serving (DESIGN.md §9): with an `AdaptiveConfig`, every executed
+batch also returns its stage-boundary valid-row counts (free — the
+compaction prefix sum computes them anyway) into a per-handle
+`cost.StatsStore`; a hysteresis-banded drift check re-optimizes under
+calibrated posterior hints and hot-swaps the executable when the workload's
+observed statistics durably leave the hints' regime.  Calibrated hints are
+part of `semantic_key`, so a swap is a deliberate cache miss into a
+coexisting regime entry, and a batch that overran a planned compaction
+capacity is re-executed under the repaired plan before it is returned.
 """
 
 from __future__ import annotations
@@ -57,14 +67,16 @@ from __future__ import annotations
 import collections
 import dataclasses
 import hashlib
+import os
 import warnings
 from typing import Mapping, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from . import masked as M
-from .cost import seed_source_stats
+from .cost import StatsStore, calibrate_hints, drift_score, seed_source_stats
 from .operators import (CoGroupOp, CrossOp, MapOp, MatchOp, Node, ReduceOp,
                         Source)
 from .physical import PhysPlan
@@ -458,12 +470,14 @@ class _Interned:
 # per-shard body of distributed execution)
 # ---------------------------------------------------------------------------
 def execute_stage(stage: Stage, ins: Sequence[M.MaskedBatch],
-                  use_kernels: bool,
-                  use_order: bool = True) -> M.MaskedBatch:
+                  use_kernels: bool, use_order: bool = True,
+                  obs: Optional[dict] = None) -> M.MaskedBatch:
     """Run one stage's local (per-worker) computation on masked batches.
 
     Order elision keys off the input batches' `order` metadata; callers
-    attach `stage.in_orders` (for forwarded inputs) before invoking."""
+    attach `stage.in_orders` (for forwarded inputs) before invoking.
+    `obs`, when given, receives the stage's KAT/Match side-channel counts
+    (observed groups / probe hits) for the adaptive feedback loop."""
     if stage.kind == "chain":
         b = ins[0]
         for op in stage.ops:
@@ -471,28 +485,37 @@ def execute_stage(stage: Stage, ins: Sequence[M.MaskedBatch],
         return b
     node = stage.top
     if stage.kind == "reduce":
-        return M._exec_reduce(node, ins[0], use_kernels, use_order)
+        return M._exec_reduce(node, ins[0], use_kernels, use_order, obs)
     if stage.kind == "match":
         lb, rb = ins
         if node.hints.pk_side == "right":
-            return M._exec_match_pk(node, lb, rb, use_kernels, use_order)
+            return M._exec_match_pk(node, lb, rb, use_kernels, use_order, obs)
         if node.hints.pk_side == "left":
             from .reorder import commute as _commute
 
             return M._exec_match_pk(_commute(node), rb, lb, use_kernels,
-                                    use_order)
+                                    use_order, obs)
         return M._exec_cross(node, lb, rb, node.left_key, node.right_key)
     if stage.kind == "cross":
         return M._exec_cross(node, *ins)
     if stage.kind == "cogroup":
-        return M._exec_cogroup(node, *ins, use_kernels, use_order=use_order)
+        return M._exec_cogroup(node, *ins, use_kernels, use_order=use_order,
+                               obs=obs)
     raise TypeError(f"unknown stage kind {stage.kind!r}")
+
+
+def stage_key(stage: Stage) -> tuple:
+    """A stage's identity in a `StatsStore`: the fused operators' NAMES
+    (bottom-up).  Names survive reordering rewrites, so observations made
+    under one plan calibrate every equivalent plan of the same flow."""
+    return tuple(op.name for op in stage.ops)
 
 
 def run_stages(stages: Sequence[Stage], bindings: Mapping[str, M.MaskedBatch],
                use_kernels: bool, compact_slack: float,
                stats_memo: dict, scale: float = 1.0,
-               use_order: bool = True) -> M.MaskedBatch:
+               use_order: bool = True, observe: Optional[list] = None,
+               caps: Optional[list] = None) -> M.MaskedBatch:
     """Execute a lowered stage list on masked batches (traceable).
 
     Compaction fires once per stage boundary (not per fused operator), to
@@ -501,6 +524,13 @@ def run_stages(stages: Sequence[Stage], bindings: Mapping[str, M.MaskedBatch],
     (`cost.seed_source_stats`) so capacities track the data really flowing.
     Compaction is stable, so stage-boundary repacking PRESERVES the order
     the next stage's elision relies on.
+
+    Observation (DESIGN.md §9): with `observe` a list, each stage appends
+    `(valid_rows_before_compaction, kat_aux)` — the first term is the mask
+    popcount the compaction prefix-sum computes anyway, the second the
+    group/hit count from the KAT/Match executors (int32 -1 when the stage
+    has none).  `caps` (trace-time, static) records the capacity each stage
+    compacts to, the reference for host-side truncation detection.
     """
     results: list[M.MaskedBatch] = []
     for st in stages:
@@ -511,10 +541,65 @@ def run_stages(stages: Sequence[Stage], bindings: Mapping[str, M.MaskedBatch],
             if use_order and o and not b.order:
                 b = b.with_order(o)
             ins.append(b)
-        out = execute_stage(st, ins, use_kernels, use_order)
-        results.append(M.compact_to_estimate(out, st.top, stats_memo,
-                                             compact_slack, scale))
+        obs: Optional[dict] = {} if observe is not None else None
+        out = execute_stage(st, ins, use_kernels, use_order, obs)
+        cap = min(out.capacity,
+                  M.planned_capacity(st.top, stats_memo, compact_slack,
+                                     scale))
+        if caps is not None:
+            caps.append(cap)
+        if observe is not None:
+            observe.append((jnp.sum(out.valid.astype(jnp.int32)),
+                            obs.get("groups", jnp.int32(-1))))
+        results.append(out.compact(cap) if cap < out.capacity else out)
     return results[-1]
+
+
+def record_batch_obs(store: StatsStore, stages: Sequence[Stage],
+                     src_counts: Mapping[str, int],
+                     out_counts: Sequence[int], aux: Sequence[int],
+                     caps: Optional[Sequence[int]] = None) -> Optional[int]:
+    """Fold one executed batch's boundary counts into `store`.
+
+    Input rows per stage are resolved host-side from the producing stage's
+    (post-compaction, i.e. truncation-capped) count or the source's valid
+    count.  With `caps` given, returns the index of the first TRUNCATING
+    stage (observed pre-compaction rows exceeded the planned capacity) —
+    stages downstream of it saw truncated inputs, so their counts are NOT
+    recorded, and the truncating stage's own count is recorded with
+    `snap=True` (it is ground truth the next capacity must clear, not a
+    sample).  Returns None when nothing truncated."""
+    store.tick()
+    for name, c in src_counts.items():
+        store.observe_source(name, float(c))
+    trunc = None
+    if caps is not None:
+        for i, (c, cap) in enumerate(zip(out_counts, caps)):
+            if int(c) > int(cap):
+                trunc = i
+                break
+    n_rec = len(stages) if trunc is None else trunc + 1
+    for i in range(n_rec):
+        st = stages[i]
+        rows_in = []
+        for ref in st.inputs:
+            if ref[0] == "source":
+                rows_in.append(float(src_counts[ref[1]]))
+            else:
+                j = ref[1]
+                c = out_counts[j]
+                if caps is not None:
+                    c = min(int(c), int(caps[j]))
+                rows_in.append(float(c))
+        g: Optional[float] = float(aux[i]) if int(aux[i]) >= 0 else None
+        if st.kind == "reduce" and st.top.combiner:
+            # a combiner's per-shard groups over-count the global key set
+            # (every worker may hold every group); the merge half above it
+            # observes the true count
+            g = None
+        store.observe_stage(stage_key(st), rows_in, float(out_counts[i]),
+                            g, snap=(i == trunc))
+    return trunc
 
 
 # ---------------------------------------------------------------------------
@@ -526,24 +611,51 @@ class CacheStats:
     misses: int
     traces: int
     size: int
+    evictions: int = 0
+
+
+# default capacity of the process-wide executable cache: env-tunable so a
+# long-lived multi-regime serving process can widen (or tighten) the bound
+# without code changes.  Each entry pins a jitted executable (XLA program +
+# donated-buffer metadata), so an unbounded cache is a memory leak spelled
+# differently.
+EXEC_CACHE_CAP_ENV = "REPRO_EXEC_CACHE_CAP"
+_DEFAULT_CACHE_CAP = 256
+
+
+def _default_cache_cap() -> int:
+    try:
+        cap = int(os.environ.get(EXEC_CACHE_CAP_ENV, _DEFAULT_CACHE_CAP))
+    except ValueError:
+        return _DEFAULT_CACHE_CAP
+    return max(cap, 1)
 
 
 class ExecutableCache:
-    """LRU cache of jitted pipeline executables.
+    """Bounded LRU cache of jitted pipeline executables.
 
     Key: `(semantic_key(flow), stage order signature, per-source (name,
     schema signature, capacity bucket, runtime order), use_kernels,
-    compact_slack, use_order, donate)`.  `traces` counts actual jit traces
-    (incremented from inside the traced body), so tests can assert warm
-    calls never re-trace.
+    compact_slack, use_order, donate, observe)`.  `traces` counts actual
+    jit traces (incremented from inside the traced body), so tests can
+    assert warm calls never re-trace.
+
+    Capacity defaults to `$REPRO_EXEC_CACHE_CAP` (256): adaptive serving
+    deliberately multiplies executables (one per calibration regime), so
+    the cache must be a bound, not a leak.  Eviction drops the LRU entry
+    (its XLA executable is freed once no handle holds it) and increments
+    `evictions`; the cumulative hit/miss/trace counters are NOT rewound —
+    an evicted-then-recompiled entry shows up as a fresh miss + trace,
+    which is exactly what it costs.
     """
 
-    def __init__(self, maxsize: int = 256):
-        self.maxsize = maxsize
+    def __init__(self, maxsize: Optional[int] = None):
+        self.maxsize = maxsize if maxsize is not None else _default_cache_cap()
         self._data: collections.OrderedDict = collections.OrderedDict()
         self.hits = 0
         self.misses = 0
         self.traces = 0
+        self.evictions = 0
 
     def get(self, key):
         fn = self._data.get(key)
@@ -559,14 +671,23 @@ class ExecutableCache:
         self._data.move_to_end(key)
         while len(self._data) > self.maxsize:
             self._data.popitem(last=False)
+            self.evictions += 1
+
+    def resize(self, maxsize: int) -> None:
+        """Shrink/grow the bound, evicting LRU entries as needed."""
+        self.maxsize = max(int(maxsize), 1)
+        while len(self._data) > self.maxsize:
+            self._data.popitem(last=False)
+            self.evictions += 1
 
     def stats(self) -> CacheStats:
         return CacheStats(hits=self.hits, misses=self.misses,
-                          traces=self.traces, size=len(self._data))
+                          traces=self.traces, size=len(self._data),
+                          evictions=self.evictions)
 
     def clear(self) -> None:
         self._data.clear()
-        self.hits = self.misses = self.traces = 0
+        self.hits = self.misses = self.traces = self.evictions = 0
 
 
 _CACHE = ExecutableCache()
@@ -583,6 +704,39 @@ def _schema_sig(schema) -> tuple:
 
 
 # ---------------------------------------------------------------------------
+# Adaptive serving configuration (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AdaptiveConfig:
+    """Knobs of the observe → calibrate → re-plan loop.
+
+    The drift score (`cost.drift_score`) is hysteresis-banded: a check with
+    score >= `drift_high` ARMS the trigger, one <= `drift_low` disarms it,
+    and scores inside the band hold the armed count — a re-plan fires only
+    after `patience` consecutive armed checks, so noisy-but-stationary
+    workloads never thrash.  `prior_weight` defaults to 0 because by the
+    time a swap fires, the hysteresis run has already statistically
+    confirmed the drift — the posterior should trust the observed EWMAs
+    outright (and, quantized on the 2^(1/quant) grid, a workload drifting
+    BACK reproduces its earlier regime's hints exactly, re-hitting the warm
+    executable).  Set it > 0 to blend conservatively toward the compiler
+    hints.  `search=False` skips the optimizer re-run on swap and only
+    re-lowers the calibrated flow (capacity recalibration without plan
+    re-ordering) — cheaper when re-plan latency matters more than plan
+    quality."""
+
+    check_every: int = 4       # drift-check cadence, in served batches
+    drift_high: float = 1.0    # |log2(observed/priced)| that arms the trigger
+    drift_low: float = 0.5     # score that disarms it (hysteresis band)
+    patience: int = 2          # consecutive armed checks before a re-plan
+    min_drift_rows: float = 8.0  # ignore stages this small (log-ratio noise)
+    prior_weight: float = 0.0  # compiler hint's worth in pseudo-batches
+    quant: int = 4             # posterior grid: 2^(1/quant) steps
+    search: bool = True        # re-optimize on swap (False: re-lower only)
+    replan_max_plans: int = 2000  # enumeration budget of the swap search
+
+
+# ---------------------------------------------------------------------------
 # Compiled plan handle
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -596,6 +750,18 @@ class CompiledPlan:
     `bind_device(bindings)` / `run_device(masked)` split the host round trip
     out of the serving loop: bind once (or bind fresh batches as they
     arrive), keep every masked batch — inputs AND outputs — on device.
+
+    With `adaptive` set, every executed batch also returns its stage-boundary
+    valid-row counts (free from the compaction prefix sum) into `stats`, a
+    per-handle `cost.StatsStore`; `run`/`run_device` check a hysteresis-
+    banded drift score every `check_every` batches and, on sustained drift,
+    re-optimize under `cost.calibrate_hints` posteriors off the hot path and
+    hot-swap the executable.  Calibrated hints are part of `semantic_key`,
+    so a swap is a deliberate cache MISS into a new regime entry — the old
+    regime's executable stays warm for a workload that drifts back — and a
+    batch whose observed rows overran a stage's planned capacity is
+    re-executed under the recalibrated plan before anything is returned
+    (truncation is repriced, never served).
     """
 
     flow: Node
@@ -604,6 +770,8 @@ class CompiledPlan:
     compact_slack: float = 2.0
     use_order: bool = True
     cache: ExecutableCache = dataclasses.field(default_factory=executable_cache)
+    adaptive: Optional[AdaptiveConfig] = None
+    stats: Optional[StatsStore] = None
 
     def __post_init__(self):
         self._sources = {n.name: n for n in self.flow.iter_nodes()
@@ -614,6 +782,15 @@ class CompiledPlan:
         # dtypes per call costs more than the warm serving step itself
         self._ssig = {name: _schema_sig(src.out_schema)
                       for name, src in self._sources.items()}
+        if not hasattr(self, "_base_flow"):  # re-run by _install on swap
+            self._base_flow = self.flow
+            if self.stats is None:
+                self.stats = StatsStore()
+            self.swaps = 0
+            self._calls = 0
+            self._armed = 0
+            self._regime_key = _Interned(semantic_key(self._base_flow))
+            self._regime_tick = 0
 
     # -- binding -------------------------------------------------------------
     def _bind(self, bindings: Mapping[str, RecordBatch]):
@@ -669,28 +846,51 @@ class CompiledPlan:
 
     # -- executable lookup ---------------------------------------------------
     def _executable(self, source_sig: tuple, donate: bool = False):
+        observe = self.adaptive is not None
         key = (self._sem, source_sig, self.use_kernels, self.compact_slack,
-               self.use_order, donate)
+               self.use_order, donate, observe)
         fn = self.cache.get(key)
         if fn is None:
             stages, use_kernels = self.stages, self.use_kernels
             slack, cache = self.compact_slack, self.cache
             use_order = self.use_order
+            # planned per-stage compaction capacities, recorded as a
+            # trace-time side effect (they are static per executable): the
+            # host-side reference for truncation detection
+            stage_caps: list = []
 
             flow = self.flow
 
             def _body(mb):
                 cache.traces += 1  # trace-time side effect: counts retraces
+                stage_caps.clear()  # a retrace re-records its capacities
                 if not stages:
                     (only,) = mb.values()
-                    return only
+                    if not observe:
+                        return only
+                    src = [jnp.sum(mb[n].valid.astype(jnp.int32))
+                           for n in sorted(mb)]
+                    return only, jnp.stack(src)
                 # runtime re-estimation: price compaction capacities at the
                 # scale of the batches actually bound, not the declared
                 # deployment scale (capacities are static per executable)
                 stats_memo = seed_source_stats(
                     flow, {n: b.capacity for n, b in mb.items()}, {})
-                return run_stages(stages, mb, use_kernels, slack, stats_memo,
-                                  use_order=use_order)
+                if not observe:
+                    return run_stages(stages, mb, use_kernels, slack,
+                                      stats_memo, use_order=use_order)
+                obs_list: list = []
+                out = run_stages(stages, mb, use_kernels, slack, stats_memo,
+                                 use_order=use_order, observe=obs_list,
+                                 caps=stage_caps)
+                # one packed int32 vector — [sources (name-sorted), per-stage
+                # out counts, per-stage aux] — so the per-call observation
+                # read is a SINGLE small transfer, not one per scalar
+                src = [jnp.sum(mb[n].valid.astype(jnp.int32))
+                       for n in sorted(mb)]
+                return out, jnp.stack(
+                    src + [o[0] for o in obs_list]
+                    + [jnp.asarray(o[1], jnp.int32) for o in obs_list])
 
             # donation lets XLA alias the (padded) input buffers for scratch
             # and outputs — safe whenever the caller hands over ownership, as
@@ -713,23 +913,148 @@ class CompiledPlan:
                     return jfn(mb)
             else:
                 fn = jfn
+            fn._stage_caps = stage_caps
             self.cache.put(key, fn)
         return fn
 
+    # -- adaptive feedback (DESIGN.md §9) ------------------------------------
+    def _observe(self, fn, obs) -> bool:
+        """Fold one batch's packed observation vector into `stats`; returns
+        True when a stage truncated — in which case the plan has already
+        been force-swapped and the caller must re-execute the batch."""
+        counts = np.asarray(obs)  # one small transfer (the feedback sync)
+        names = sorted(self._sources)
+        ns, nst = len(names), len(self.stages)
+        src = dict(zip(names, counts[:ns]))
+        trunc = record_batch_obs(self.stats, self.stages, src,
+                                 counts[ns:ns + nst],
+                                 counts[ns + nst:ns + 2 * nst],
+                                 caps=fn._stage_caps)
+        if trunc is None:
+            return False
+        # the planned capacity was overrun: the batch just produced is
+        # silently missing rows.  Re-plan NOW with full confidence in the
+        # snapped observation (the truncated stage's pre-compaction count is
+        # ground truth) and have the caller re-run the batch.
+        self._replan(force=True)
+        return True
+
+    def _maybe_replan(self) -> None:
+        """The per-batch drift check: cheap, amortized over `check_every`
+        calls, hysteresis-banded so noise cannot thrash the plan."""
+        cfg = self.adaptive
+        self._calls += 1
+        if self._calls % cfg.check_every:
+            return
+        score = drift_score(self.flow, self.stats,
+                            min_rows=cfg.min_drift_rows,
+                            newer_than=self._regime_tick)
+        if score >= cfg.drift_high:
+            self._armed += 1
+        elif score <= cfg.drift_low:
+            self._armed = 0
+        if self._armed >= cfg.patience:
+            self._replan()
+            self._armed = 0
+
+    def _replan(self, force: bool = False) -> bool:
+        """Calibrate hints from `stats` and, if that lands in a NEW regime
+        (different posterior hints — i.e. a different `semantic_key`),
+        re-optimize and hot-swap the lowered stages.  Runs off the hot path:
+        only when drift is sustained (or a truncation forced it), never per
+        batch.  Returns True when a swap was installed."""
+        cfg = self.adaptive
+        calibrated = calibrate_hints(
+            self._base_flow, self.stats,
+            prior_weight=0.0 if force else cfg.prior_weight,
+            quant=cfg.quant)
+        sem = _Interned(semantic_key(calibrated))
+        if sem == self._regime_key and not force:
+            return False  # same quantized regime: the current plan stands
+        new_flow, new_stages = calibrated, None
+        if cfg.search:
+            from .enumeration import PlanSpaceExceeded
+            from .optimizer import optimize
+
+            try:
+                res = optimize(calibrated, max_plans=cfg.replan_max_plans,
+                               include_commutes=False)
+                new_flow = res.best.plan.node
+                new_stages = lower_phys(res.best.plan)
+            except PlanSpaceExceeded:
+                pass  # fall back to re-lowering the calibrated flow
+        if new_stages is None:
+            new_stages = lower(calibrated)
+        self._install(new_flow, new_stages, sem)
+        return True
+
+    def _install(self, flow: Node, stages: tuple, regime_key) -> None:
+        """Hot-swap the handle onto a new plan.  The executable cache is
+        untouched: the next call MISSES into the new regime's entry (or hits
+        it, if this regime was served before) while previous regimes' warm
+        entries remain reusable."""
+        self.flow = flow
+        self.stages = stages
+        self.__post_init__()  # recompute _sources/_sem/_ssig; state kept
+        self._regime_key = regime_key
+        self._regime_tick = self.stats.clock
+        self.swaps += 1
+
+    def _serve_adaptive(self, rebind, donate: bool) -> M.MaskedBatch:
+        """The observing serve step shared by `run` and `run_device`:
+        execute, fold the observation in, and on a capacity overrun re-plan
+        and re-execute (`rebind` re-materializes the inputs — donated
+        buffers are gone after a donating call).  Each force-swap repairs at
+        least the first truncating stage, so attempts are bounded by the
+        CURRENT plan's stage count (re-read per attempt: a swap may change
+        the fusion grouping)."""
+        attempts = 0
+        masked, sig = rebind()
+        while True:
+            fn = self._executable(sig, donate=donate)
+            out, obs = fn(masked)
+            if not self._observe(fn, obs):
+                self._maybe_replan()
+                return out
+            attempts += 1
+            if attempts > len(self.stages) + 2:
+                raise RuntimeError(
+                    "adaptive re-planning failed to clear a capacity "
+                    f"overrun after {attempts} attempts")
+            masked, sig = rebind()
+
     # -- execution -----------------------------------------------------------
     def run(self, bindings: Mapping[str, RecordBatch]) -> RecordBatch:
-        """Execute on fresh source batches; warm-cache calls do not retrace."""
-        masked, sig = self._bind(bindings)
-        return self._executable(sig, donate=True)(masked).to_record_batch()
+        """Execute on fresh source batches; warm-cache calls do not retrace.
+
+        Under `adaptive`, the batch's boundary counts are recorded and a
+        batch that overran a planned capacity is transparently re-executed
+        under the recalibrated plan (re-binding from the host batches — the
+        donated device buffers are gone)."""
+        if self.adaptive is None:
+            masked, sig = self._bind(bindings)
+            return self._executable(sig, donate=True)(masked).to_record_batch()
+        return self._serve_adaptive(lambda: self._bind(bindings),
+                                    donate=True).to_record_batch()
 
     def run_device(self, masked_bindings: Mapping[str, M.MaskedBatch],
                    donate: bool = False) -> M.MaskedBatch:
         """Device-resident serving step: masked batches in, masked batch out,
         no host transfer and no re-binding.  Dispatch is asynchronous — the
         caller chains further device work (or blocks when it must read).
-        Pass `donate=True` only when the input batches are not reused."""
-        masked, sig = self._masked_sig(masked_bindings)
-        return self._executable(sig, donate=donate)(masked)
+        Pass `donate=True` only when the input batches are not reused.
+
+        Under `adaptive`, the observation read synchronizes each step (the
+        price of feedback), and donation is rejected: a truncation re-run
+        needs the input batches intact."""
+        if self.adaptive is None:
+            masked, sig = self._masked_sig(masked_bindings)
+            return self._executable(sig, donate=donate)(masked)
+        if donate:
+            raise ValueError("donate=True is incompatible with adaptive "
+                             "serving: truncation re-runs reuse the inputs")
+        return self._serve_adaptive(
+            lambda: self._masked_sig(masked_bindings), donate=False)
 
     def run_masked(self, masked_bindings: Mapping[str, M.MaskedBatch]
                    ) -> M.MaskedBatch:
@@ -752,14 +1077,20 @@ class CompiledPlan:
 def compile_plan(flow_or_plan, use_kernels: bool = False,
                  compact_slack: float = 2.0,
                  cache: Optional[ExecutableCache] = None,
-                 use_order: bool = True) -> CompiledPlan:
+                 use_order: bool = True,
+                 adaptive: Optional[AdaptiveConfig] = None,
+                 stats: Optional[StatsStore] = None) -> CompiledPlan:
     """Lower a logical flow — or a `PhysPlan`, whose shipping strategies and
     physical `Props` then thread into the stages — into a `CompiledPlan`
-    ready for repeated execution."""
+    ready for repeated execution.  Pass an `AdaptiveConfig` to serve with
+    observed-cardinality feedback and drift-triggered plan swaps
+    (DESIGN.md §9); `stats` optionally shares a `StatsStore` across handles
+    (e.g. seeded from a previous serving session)."""
     if isinstance(flow_or_plan, PhysPlan):
         flow, stages = flow_or_plan.node, lower_phys(flow_or_plan)
     else:
         flow, stages = flow_or_plan, lower(flow_or_plan)
     return CompiledPlan(flow=flow, stages=stages,
                         use_kernels=use_kernels, compact_slack=compact_slack,
-                        use_order=use_order, cache=cache or _CACHE)
+                        use_order=use_order, cache=cache or _CACHE,
+                        adaptive=adaptive, stats=stats)

@@ -15,15 +15,26 @@ so every seed yields a valid flow; it is driven by `numpy.random.default_rng`
 and needs no optional dependencies, making the differential harness part of
 tier-1.  Property-based tests can still layer hypothesis on top by drawing
 the seed from a strategy.
+
+Two adversarial modes harden the adaptive-statistics loop (DESIGN.md §9):
+`adversarial_hints` perturbs every cost hint by up to 100x in either
+direction (underestimates included — the direction that overruns compaction
+capacities), and `bindings(seed, drift=...)` shifts the per-batch key/value
+distributions mid-serve.  `assert_adaptive_identical` serves such a
+workload through an adaptive `CompiledPlan` and asserts every batch —
+before, during and after every calibration swap, truncation re-runs
+included — stays BIT-identical to the eager reference.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 
 from repro.core import executor, flow as F
 from repro.core.enumeration import enumerate_plans
-from repro.core.operators import Hints
+from repro.core.operators import Hints, Source
 from repro.core.record import Schema, batch_from_dict
 
 KEY_DOMAIN = 6  # join/group key values in [0, KEY_DOMAIN)
@@ -193,7 +204,13 @@ class _Gen:
                                  self._cogroup_udf(schema, right.out_schema))
         return node
 
-    def bindings(self, seed: int) -> dict:
+    def bindings(self, seed: int, drift: float = 0.0) -> dict:
+        """Random bindings; `drift` in [0, 1] shifts the per-batch
+        distributions (the adaptive-statistics drift mode): keys collapse
+        toward one hot value (fewer groups, skewed join fanout) and values
+        snap toward multiples of 6 (flipping the pass rates of the
+        generated `% mod` filters for mod 2 and 3) with probability
+        `drift`.  `drift=0` reproduces the stationary generator exactly."""
         rng = np.random.default_rng(seed)
         out = {}
         for name, schema, unique_key, rows in self.sources:
@@ -202,19 +219,86 @@ class _Gen:
                 if i == 0 and unique_key:
                     cols[f] = np.arange(KEY_DOMAIN, dtype=np.int64)
                 elif i == 0:
-                    cols[f] = rng.integers(0, KEY_DOMAIN, rows)
+                    keys = rng.integers(0, KEY_DOMAIN, rows)
+                    if drift:
+                        keys = np.where(rng.random(rows) < drift, 0, keys)
+                    cols[f] = keys
                 else:
-                    cols[f] = rng.integers(-5, 9, rows if not unique_key
-                                           else KEY_DOMAIN)
+                    n = rows if not unique_key else KEY_DOMAIN
+                    vals = rng.integers(-5, 9, n)
+                    if drift:
+                        vals = np.where(rng.random(n) < drift,
+                                        (vals // 6) * 6, vals)
+                    cols[f] = vals
             out[name] = batch_from_dict(cols)
         return out
 
 
 def random_flow(seed: int, max_ops: int = 5):
-    """(flow_root, make_bindings(seed) -> dict) for one generator seed."""
+    """(flow_root, make_bindings(seed, drift=0.0) -> dict) for one seed."""
     g = _Gen(seed, max_ops=max_ops)
     root = g.build()
     return root, g.bindings
+
+
+def adversarial_hints(root, seed: int, factor: float = 100.0):
+    """Rebuild `root` with every COST hint perturbed by up to `factor`x in a
+    seeded random direction — underestimates included, the direction whose
+    compaction capacities overrun at runtime.  Execution-semantic hints
+    (`pk_side`, which selects the executor) are left alone: the adversary
+    lies about statistics, not about the data's key structure."""
+    rng = np.random.default_rng(seed)
+
+    def jitter():
+        return float(factor ** rng.uniform(-1.0, 1.0))
+
+    def perturb(h: Hints) -> Hints:
+        new = {}
+        if h.selectivity is not None:
+            new["selectivity"] = h.selectivity * jitter()
+        if h.distinct_keys is not None:
+            new["distinct_keys"] = max(1, round(h.distinct_keys * jitter()))
+        if h.join_fanout is not None:
+            new["join_fanout"] = h.join_fanout * jitter()
+        if h.group_selectivity is not None:
+            new["group_selectivity"] = h.group_selectivity * jitter()
+        new["cpu_flops_per_record"] = h.cpu_flops_per_record * jitter()
+        return dataclasses.replace(h, **new)
+
+    def rebuild(n):
+        kids = [rebuild(c) for c in n.children]
+        if isinstance(n, Source):
+            return n
+        out = n.with_children(*kids)
+        return dataclasses.replace(out, hints=perturb(out.hints))
+
+    return rebuild(root)
+
+
+def assert_adaptive_identical(root, make_bindings, seed: int,
+                              n_stationary: int = 4, n_drifted: int = 6,
+                              drift: float = 0.7):
+    """Serve a drifting workload through an adaptive CompiledPlan and assert
+    EVERY batch — across calibration swaps and truncation re-runs — is
+    bit-identical (row multiset, no tolerance) to the eager reference on
+    the same batch.  Aggressive thresholds force the feedback loop to act
+    within a short serve; returns the number of swaps performed."""
+    from repro.core.pipeline import (AdaptiveConfig, ExecutableCache,
+                                     compile_plan)
+
+    cfg = AdaptiveConfig(check_every=2, patience=1, drift_high=0.6,
+                         drift_low=0.3, min_drift_rows=0.0,
+                         replan_max_plans=400)
+    cp = compile_plan(root, cache=ExecutableCache(), adaptive=cfg)
+    for t in range(n_stationary + n_drifted):
+        b = make_bindings(seed + 37 * t,
+                          drift=0.0 if t < n_stationary else drift)
+        got = canonical_rows(cp.run(b))
+        ref = canonical_rows(executor.execute(root, b))
+        assert got == ref, (
+            f"adaptive serve diverged from eager on batch {t} "
+            f"(swaps so far: {cp.swaps}):\n" + root.pretty())
+    return cp.swaps
 
 
 def canonical_rows(batch) -> list:

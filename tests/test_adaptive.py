@@ -1,0 +1,370 @@
+"""Adaptive statistics feedback (DESIGN.md §9): StatsStore accumulation and
+cross-shard merge, calibrate_hints posterior math, drift-score hysteresis
+(no thrash on noisy-but-stationary serving), calibration-regime executable
+cache semantics, and the truncation-repair guarantee."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import flows
+from repro.core import cost, executor
+from repro.core import flow as F
+from repro.core.cost import StatsStore, calibrate_hints, drift_score
+from repro.core.operators import Hints
+from repro.core.pipeline import (AdaptiveConfig, ExecutableCache,
+                                 compile_plan, semantic_key)
+from repro.core.record import Schema, batch_from_dict
+
+
+# ---------------------------------------------------------------------------
+# StatsStore: accumulation, EWMA semantics, cross-shard merge
+# ---------------------------------------------------------------------------
+def test_store_accumulates_and_ewma():
+    s = StatsStore(alpha=0.5)
+    s.tick()
+    s.observe_stage(("F",), (100.0,), 40.0, groups=4.0)
+    o = s.stage(("F",))
+    assert o.batches == 1 and o.rows_out == 40.0
+    assert o.ewma_out == 40.0 and o.ewma_in == (100.0,)  # first sample snaps
+    s.tick()
+    s.observe_stage(("F",), (100.0,), 80.0, groups=8.0)
+    o = s.stage(("F",))
+    assert o.batches == 2 and o.rows_out == 120.0
+    assert o.ewma_out == pytest.approx(60.0)  # 0.5 * 40 + 0.5 * 80
+    assert o.ewma_groups == pytest.approx(6.0)
+    assert o.last_tick == 2
+
+
+def test_store_snap_overrides_history():
+    s = StatsStore(alpha=0.25)
+    for out in (10.0, 10.0, 10.0):
+        s.tick()
+        s.observe_stage(("F",), (100.0,), out)
+    s.tick()
+    s.observe_stage(("F",), (100.0,), 500.0, snap=True)
+    # a snapped observation (truncation ground truth) replaces the EWMA
+    assert s.stage(("F",)).ewma_out == 500.0
+
+
+def test_store_merge_across_shards():
+    a, b = StatsStore(), StatsStore()
+    for _ in range(3):
+        a.tick()
+        a.observe_stage(("R",), (90.0,), 30.0, groups=3.0)
+        a.observe_source("S", 90.0)
+    b.tick()
+    b.observe_stage(("R",), (30.0,), 60.0, groups=6.0)
+    b.observe_source("S", 30.0)
+    a.merge(b)
+    o = a.stage(("R",))
+    assert o.batches == 4
+    assert o.rows_out == pytest.approx(150.0)
+    assert o.rows_in == (pytest.approx(300.0),)
+    # EWMAs combine weighted by batch counts: 3/4 * 30 + 1/4 * 60
+    assert o.ewma_out == pytest.approx(37.5)
+    assert o.ewma_groups == pytest.approx(3.75)
+    assert a.source_rows()["S"] == pytest.approx(0.75 * 90 + 0.25 * 30)
+
+
+# ---------------------------------------------------------------------------
+# calibrate_hints: posterior math
+# ---------------------------------------------------------------------------
+def _filter_flow(sel_hint, n=1024):
+    src = F.source("I", Schema.of(v=np.int64, w=np.int64), num_records=n)
+
+    def keep(ir, out):
+        out.emit(ir.copy(), where=ir.get("v") >= 0)
+
+    return F.map_(src, keep, name="Keep", hints=Hints(selectivity=sel_hint))
+
+
+def test_calibrate_full_confidence_is_quantized_observation():
+    root = _filter_flow(1.0)
+    s = StatsStore()
+    s.tick()
+    s.observe_stage(("Keep",), (1000.0,), 40.0)
+    cal = calibrate_hints(root, s, prior_weight=0.0, quant=4)
+    got = cal.hints.selectivity
+    expect = 2.0 ** (round(math.log2(0.04) * 4) / 4)
+    assert got == pytest.approx(expect)
+    # the original flow is untouched (rebuild, not mutation)
+    assert root.hints.selectivity == 1.0
+
+
+def test_calibrate_confidence_weighting_monotone():
+    """More observed batches pull the posterior monotonically from the prior
+    toward the (quantized) observation."""
+    root = _filter_flow(1.0)
+    posts = []
+    for n_batches in (1, 8, 64, 256):
+        s = StatsStore()
+        for _ in range(n_batches):
+            s.tick()
+            s.observe_stage(("Keep",), (1000.0,), 40.0)
+        cal = calibrate_hints(root, s, prior_weight=4.0, quant=64)
+        posts.append(cal.hints.selectivity)
+    assert all(a > b for a, b in zip(posts, posts[1:]))  # prior 1.0 > obs
+    assert posts[0] < 1.0
+    assert posts[-1] == pytest.approx(0.04, rel=0.15)
+
+
+def test_calibrate_distributes_chain_correction():
+    """A fused Map chain's observed ratio splits evenly (in log space) over
+    the fused ops — only the product is observable, and only the product
+    prices stage boundaries."""
+    src = F.source("I", Schema.of(v=np.int64), num_records=1024)
+
+    def k1(ir, out):
+        out.emit(ir.copy(), where=ir.get("v") % 2 == 0)
+
+    def k2(ir, out):
+        out.emit(ir.copy(), where=ir.get("v") % 3 == 0)
+
+    root = F.map_(F.map_(src, k1, name="A", hints=Hints(selectivity=1.0)),
+                  k2, name="B", hints=Hints(selectivity=1.0))
+    s = StatsStore()
+    s.tick()
+    s.observe_stage(("A", "B"), (1024.0,), 64.0)  # product 1/16
+    cal = calibrate_hints(root, s, prior_weight=0.0, quant=64)
+    sa, sb = cal.child.hints.selectivity, cal.hints.selectivity
+    assert sa == pytest.approx(0.25, rel=0.05)
+    assert sb == pytest.approx(0.25, rel=0.05)
+    assert sa * sb == pytest.approx(1 / 16, rel=0.05)
+
+
+def test_calibrate_reduce_and_match_posteriors():
+    root, _ = flows.q15()
+    s = StatsStore()
+    for _ in range(8):
+        s.tick()
+        s.observe_stage(("FilterShipdate",), (1000.0,), 40.0)
+        s.observe_stage(("AggRevenue",), (40.0,), 4.0, groups=4.0)
+        s.observe_stage(("JoinSupplier",), (4.0, 16.0), 4.0, groups=4.0)
+    cal = calibrate_hints(root, s, prior_weight=0.0, quant=4)
+    by_name = {n.name: n for n in cal.iter_nodes()}
+    assert by_name["AggRevenue"].hints.distinct_keys == 4
+    # the PK match observed fanout 1.0; selectivity pinned so the estimator
+    # does not double-apply a factor
+    assert by_name["JoinSupplier"].hints.join_fanout == pytest.approx(1.0)
+    assert by_name["JoinSupplier"].hints.selectivity == 1.0
+    # unobserved source is untouched
+    assert by_name["FilterShipdate"].hints.selectivity == pytest.approx(
+        2.0 ** (round(math.log2(0.04) * 4) / 4))
+
+
+def test_calibrate_quantization_defines_stable_regimes():
+    """Noisy-but-stationary observations land on the SAME posterior hints
+    (same semantic key): the calibration regime is discrete."""
+    root = _filter_flow(1.0)
+    keys = set()
+    rng = np.random.default_rng(0)
+    for trial in range(6):
+        s = StatsStore()
+        for _ in range(8):
+            s.tick()
+            noisy = 40.0 * float(rng.uniform(0.95, 1.05))
+            s.observe_stage(("Keep",), (1000.0,), noisy)
+        cal = calibrate_hints(root, s, prior_weight=0.0, quant=4)
+        keys.add(hash(semantic_key(cal)))
+    assert len(keys) == 1
+
+
+def test_calibrate_unobserved_flow_is_identity():
+    root = _filter_flow(0.5)
+    assert calibrate_hints(root, StatsStore()) is root
+
+
+# ---------------------------------------------------------------------------
+# drift score + hysteresis: no thrash on stationary noise, one swap on drift
+# ---------------------------------------------------------------------------
+def test_drift_score_zero_when_hints_true():
+    root = _filter_flow(0.5)
+    s = StatsStore()
+    for _ in range(4):
+        s.tick()
+        s.observe_source("I", 1000.0)
+        s.observe_stage(("Keep",), (1000.0,), 500.0)
+    assert drift_score(root, s) == pytest.approx(0.0)
+    s.tick()
+    s.observe_stage(("Keep",), (1000.0,), 20.0, snap=True)
+    assert drift_score(root, s) > 4.0
+
+
+def _phase_bindings(n, pass_frac):
+    """Deterministic batch where EXACTLY n*pass_frac rows pass `v < n//2`."""
+    k = int(n * pass_frac)
+    v = np.concatenate([np.zeros(k, np.int64),
+                        np.full(n - k, n, np.int64)])
+    return {"I": batch_from_dict({"v": v, "w": np.arange(n)})}
+
+
+def _serving_flow(n=1024):
+    src = F.source("I", Schema.of(v=np.int64, w=np.int64), num_records=n)
+
+    def keep(ir, out):
+        out.emit(ir.copy(), where=ir.get("v") < n // 2)
+
+    return F.map_(src, keep, name="Keep", hints=Hints(selectivity=0.5))
+
+
+def test_stationary_serving_never_swaps_or_retraces():
+    """Honest hints + noisy-but-stationary data: zero swaps, zero warm-path
+    retraces — the existing steady-state serving contract is unchanged by
+    observation."""
+    n = 1024
+    root = _serving_flow(n)
+    cache = ExecutableCache()
+    cp = compile_plan(root, cache=cache,
+                      adaptive=AdaptiveConfig(check_every=1, patience=1))
+    rng = np.random.default_rng(1)
+    for _ in range(12):
+        frac = float(rng.uniform(0.45, 0.55))  # noisy around the true hint
+        cp.run(_phase_bindings(n, frac))
+    assert cp.swaps == 0
+    s = cache.stats()
+    assert s.traces == 1 and s.hits == 11
+
+
+def test_hysteresis_band_holds_through_patience():
+    """A single outlier batch arms the trigger but cannot swap alone when
+    `patience` demands sustained drift."""
+    n = 1024
+    root = _serving_flow(n)
+    cp = compile_plan(root, cache=ExecutableCache(),
+                      adaptive=AdaptiveConfig(check_every=1, patience=3))
+    for _ in range(4):
+        cp.run(_phase_bindings(n, 0.5))
+    cp.run(_phase_bindings(n, 0.02))   # one outlier: arms
+    cp.run(_phase_bindings(n, 0.5))
+    cp.run(_phase_bindings(n, 0.5))    # EWMA recovers: disarms before 3
+    for _ in range(4):
+        cp.run(_phase_bindings(n, 0.5))
+    assert cp.swaps == 0
+
+
+def test_drift_swaps_once_then_stabilizes():
+    n = 1024
+    root = _serving_flow(n)
+    cache = ExecutableCache()
+    # alpha=1: the EWMA is the last batch, so the deterministic workload
+    # yields an exactly reproducible posterior per phase
+    cp = compile_plan(root, cache=cache, stats=cost.StatsStore(alpha=1.0),
+                      adaptive=AdaptiveConfig(check_every=1, patience=2))
+    for _ in range(4):
+        cp.run(_phase_bindings(n, 0.5))
+    assert cp.swaps == 0
+    for _ in range(10):
+        cp.run(_phase_bindings(n, 1 / 32))  # sustained 16x drift
+    assert cp.swaps == 1  # swapped, then steady: no thrash
+    by_name = {m.name: m for m in cp.flow.iter_nodes()}
+    assert by_name["Keep"].hints.selectivity == pytest.approx(1 / 32)
+
+
+# ---------------------------------------------------------------------------
+# Cache-regime semantics
+# ---------------------------------------------------------------------------
+def test_swap_is_a_cache_miss_and_regimes_coexist():
+    """Pre- and post-swap executables are DISTINCT cache entries; a workload
+    drifting back to its original statistics re-enters the original regime
+    as a warm HIT — no retrace."""
+    n = 1024
+    root = _serving_flow(n)
+    cache = ExecutableCache()
+    cp = compile_plan(root, cache=cache, stats=cost.StatsStore(alpha=1.0),
+                      adaptive=AdaptiveConfig(check_every=1, patience=2))
+    for _ in range(4):
+        cp.run(_phase_bindings(n, 0.5))     # regime A (the declared hints)
+    for _ in range(6):
+        cp.run(_phase_bindings(n, 1 / 32))  # drift -> regime B
+    assert cp.swaps == 1
+    s = cache.stats()
+    assert s.size == 2 and s.traces == 2    # A and B coexist
+    traces_after_b = cache.stats().traces
+    for _ in range(6):
+        cp.run(_phase_bindings(n, 0.5))     # drift BACK: posterior == 0.5
+    assert cp.swaps == 2
+    s = cache.stats()
+    # 1/2 is on the quantization grid, so the drift-back posterior equals
+    # the declared hint exactly: regime A's warm executable is re-hit
+    assert s.traces == traces_after_b
+    assert s.size == 2
+
+
+def test_semantic_key_differs_across_calibration_regimes():
+    root = _filter_flow(1.0)
+    s = StatsStore()
+    s.tick()
+    s.observe_stage(("Keep",), (1000.0,), 40.0)
+    cal = calibrate_hints(root, s, prior_weight=0.0)
+    assert semantic_key(cal) != semantic_key(root)
+    # re-deriving the same regime reproduces the same key (warm reuse)
+    cal2 = calibrate_hints(root, s, prior_weight=0.0)
+    assert semantic_key(cal2) == semantic_key(cal)
+
+
+# ---------------------------------------------------------------------------
+# Truncation repair: an underestimated hint must never ship missing rows
+# ---------------------------------------------------------------------------
+def test_underestimated_hint_repaired_not_truncated():
+    """A 100x-under selectivity hint makes the shipped plan's compaction
+    capacity overrun on the very first batch; the handle must detect the
+    overrun from the observed counts, re-plan with the snapped observation
+    and transparently re-run — returning the complete result."""
+    n = 2048
+    src = F.source("I", Schema.of(v=np.int64, w=np.int64), num_records=n)
+
+    def keep(ir, out):
+        out.emit(ir.copy(), where=ir.get("v") >= 0)  # keeps ~90%
+
+    root = F.map_(src, keep, name="Keep", hints=Hints(selectivity=0.005))
+    rng = np.random.default_rng(7)
+    b = {"I": batch_from_dict({
+        "v": rng.integers(-1, 10, n), "w": rng.integers(0, 100, n)})}
+    ref = executor.execute(root, b)
+    cp = compile_plan(root, cache=ExecutableCache(),
+                      adaptive=AdaptiveConfig())
+    out = cp.run(b)
+    assert out.equivalent(ref, atol=0)
+    assert cp.swaps >= 1
+    # non-adaptive serving of the same flow really would have truncated
+    # (the guard below is what the adaptive path is FOR)
+    plain = compile_plan(root, cache=ExecutableCache())
+    assert plain.run(b).capacity < ref.capacity
+
+
+def test_run_device_adaptive_rejects_donation():
+    root = _serving_flow(256)
+    cp = compile_plan(root, cache=ExecutableCache(),
+                      adaptive=AdaptiveConfig())
+    staged = cp.bind_device(_phase_bindings(256, 0.5))
+    with pytest.raises(ValueError, match="donate"):
+        cp.run_device(staged, donate=True)
+    out = cp.run_device(staged)  # non-donating adaptive device step works
+    ref = executor.execute(root, _phase_bindings(256, 0.5))
+    assert out.to_record_batch().equivalent(ref, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# Distributed observation: psum-aggregated counts feed the same store
+# ---------------------------------------------------------------------------
+def test_distributed_observation_aggregates_global_counts():
+    from repro.core.distributed import execute_distributed
+    from repro.core.optimizer import optimize
+    from repro.core.physical import Ctx
+
+    root, mkb = flows.q15()
+    b = mkb(1200, seed=3)
+    res = optimize(root, Ctx(dop=1), include_commutes=False)
+    store = StatsStore()
+    out = execute_distributed(res.best.plan, b, stats_store=store)
+    ref = executor.execute(root, b)
+    assert out.equivalent(ref, atol=1e-4)
+    src = store.source_rows()
+    assert src["lineitem"] == pytest.approx(1200.0)
+    keys = {k[-1] for k, _ in store.stages()}
+    assert any(k.startswith("AggRevenue") for k in keys)
+    # the filter stage's observed global selectivity is ~0.04
+    (filt,) = [o for k, o in store.stages() if k[-1] == "FilterShipdate"]
+    assert filt.ewma_out / filt.ewma_in[0] == pytest.approx(0.04, rel=0.5)

@@ -1,5 +1,7 @@
-"""benchmarks/run.py CLI: --list output and clean --only validation."""
+"""benchmarks/run.py CLI (--list output, clean --only validation) and the
+check_regression gate's loud-failure contract for missing keys."""
 
+import json
 import os
 import subprocess
 import sys
@@ -9,7 +11,8 @@ import pytest
 _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 EXPECTED_BENCHES = {"q7", "q15", "textmining", "clickstream", "sca",
-                    "enumeration", "pipeline", "aggregation", "roofline"}
+                    "enumeration", "pipeline", "aggregation", "adaptive",
+                    "roofline"}
 
 
 def _run_cli(*args, timeout=180):
@@ -51,3 +54,103 @@ def test_only_mixed_known_unknown_errors_before_running(list_output):
     assert "bogus" in r.stderr and "Traceback" not in r.stderr
     # nothing ran: no summary section was printed
     assert "==== summary ====" not in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# check_regression: keys missing from the candidate JSON must FAIL loudly,
+# never silently shrink the comparison
+# ---------------------------------------------------------------------------
+@pytest.fixture()
+def gate_env(tmp_path, monkeypatch):
+    """Point check_regression at fabricated baseline/quick artifacts."""
+    sys.path.insert(0, _REPO)
+    from benchmarks import check_regression
+
+    def fake_baseline_path(name, quick):
+        suffix = ".quick.json" if quick else ".json"
+        return str(tmp_path / f"BENCH_{name}{suffix}")
+
+    monkeypatch.setattr(check_regression, "baseline_path", fake_baseline_path)
+
+    def write(name, quick, rows):
+        with open(fake_baseline_path(name, quick), "w") as f:
+            json.dump({"bench": name, "rows": rows}, f)
+
+    return check_regression, write
+
+
+def _row(flow, bps):
+    return {"flow": flow, "rows": 1000, "pipeline_bps": bps}
+
+
+def test_gate_fails_loudly_on_flow_missing_from_candidate(gate_env):
+    cr, write = gate_env
+    write("pipeline", False, [_row("q15", 100.0), _row("clickstream", 50.0)])
+    write("pipeline", True, [_row("q15", 100.0)])  # clickstream vanished
+    errors = []
+    cr.check_bench("pipeline", 2.0, errors)
+    assert any("clickstream" in e and "missing" in e for e in errors), errors
+
+
+def test_gate_fails_loudly_on_metric_missing_from_row(gate_env):
+    cr, write = gate_env
+    write("pipeline", False, [_row("q15", 100.0)])
+    bad = {"flow": "q15", "rows": 1000}  # row present, gated metric gone
+    write("pipeline", True, [bad])
+    errors = []
+    cr.check_bench("pipeline", 2.0, errors)
+    assert any("pipeline_bps" in e and "missing" in e.lower()
+               for e in errors), errors
+
+
+def test_gate_passes_on_complete_candidate(gate_env):
+    cr, write = gate_env
+    rows = [_row("q15", 100.0), _row("clickstream", 50.0)]
+    write("pipeline", False, rows)
+    write("pipeline", True, rows)
+    errors = []
+    assert cr.check_bench("pipeline", 2.0, errors) == 2
+    assert errors == []
+
+
+def test_gate_fails_loudly_on_rows_mismatch(gate_env):
+    """A changed per-batch data size must demand a regenerated baseline,
+    not silently drop the flow from the rate comparison."""
+    cr, write = gate_env
+    write("pipeline", False, [_row("q15", 100.0), _row("clickstream", 50.0)])
+    changed = dict(_row("q15", 100.0), rows=2000)
+    write("pipeline", True, [changed, _row("clickstream", 50.0)])
+    errors = []
+    cr.check_bench("pipeline", 2.0, errors)
+    assert any("q15" in e and "rows" in e for e in errors), errors
+
+
+def test_pipeline_vs_eager_fails_on_missing_metric(gate_env):
+    """The serving-vs-eager bar must not default a vanished eager_bps to 0
+    (which would make the floor comparison always pass)."""
+    cr, write = gate_env
+    rows = [{"flow": f, "rows": 1000, "pipeline_bps": 10.0}
+            for f in cr.EAGER_GATED_FLOWS]  # eager_bps absent
+    write("pipeline", False, rows)
+    write("pipeline", True, rows)
+    errors = []
+    cr.check_pipeline_vs_eager(1.0, errors)
+    assert any("eager_bps" in e for e in errors), errors
+
+
+def test_enumeration_quick_subset_is_declared_not_silent(gate_env):
+    """enumeration's quick run is a declared subset of the full sweep:
+    full-only flows are tolerated, declared quick flows are required."""
+    cr, write = gate_env
+    declared = sorted(cr.GATES["enumeration"][2])
+    full = [{"flow": f, "rows": 10, "plans_per_s": 5.0}
+            for f in declared + ["chain-join-8"]]  # full-only extra
+    write("enumeration", False, full)
+    write("enumeration", True, full[:-1])
+    errors = []
+    cr.check_bench("enumeration", 2.0, errors)
+    assert errors == []  # subset exactly as declared: fine
+    write("enumeration", True, full[1:-1])  # drop a DECLARED quick flow
+    errors = []
+    cr.check_bench("enumeration", 2.0, errors)
+    assert any(declared[0] in e for e in errors), errors

@@ -401,6 +401,87 @@ def test_cache_miss_on_capacity_bucket_change():
 
 
 # ---------------------------------------------------------------------------
+# Bounded LRU eviction: a long multi-schema (or multi-regime) serve loop
+# must not grow the executable cache without bound
+# ---------------------------------------------------------------------------
+def _schema_variant_flow(i):
+    sch = Schema.of(**{f"A{i}": np.int64})
+
+    def m(ir, out, i=i):
+        out.emit(ir.copy().set(f"A{i}", ir.get(f"A{i}") + 1))
+
+    return F.map_(F.source(f"I{i}", sch, num_records=64), m, name=f"m{i}")
+
+
+def _schema_variant_bindings(i):
+    return {f"I{i}": batch_from_dict({f"A{i}": np.arange(8)})}
+
+
+def test_cache_eviction_bounds_size_and_counts_coherently():
+    cache = ExecutableCache(maxsize=2)
+    for i in range(3):
+        compile_plan(_schema_variant_flow(i), cache=cache).run(
+            _schema_variant_bindings(i))
+    s = cache.stats()
+    assert s.size == 2 and s.evictions == 1
+    # cumulative counters are NOT rewound by eviction: 3 misses, 3 traces
+    assert s.misses == 3 and s.traces == 3 and s.hits == 0
+    # the evicted (LRU) entry re-enters as a fresh miss + retrace...
+    compile_plan(_schema_variant_flow(0), cache=cache).run(
+        _schema_variant_bindings(0))
+    s = cache.stats()
+    assert s.misses == 4 and s.traces == 4 and s.evictions == 2
+    # ...while the most-recently-used entry stayed warm
+    compile_plan(_schema_variant_flow(2), cache=cache).run(
+        _schema_variant_bindings(2))
+    s = cache.stats()
+    assert s.hits == 1 and s.traces == 4
+    assert s.size == 2
+
+
+def test_cache_lru_order_tracks_use():
+    cache = ExecutableCache(maxsize=2)
+    cp0 = compile_plan(_schema_variant_flow(0), cache=cache)
+    cp1 = compile_plan(_schema_variant_flow(1), cache=cache)
+    cp0.run(_schema_variant_bindings(0))
+    cp1.run(_schema_variant_bindings(1))
+    cp0.run(_schema_variant_bindings(0))  # 0 is now most recently used
+    compile_plan(_schema_variant_flow(2), cache=cache).run(
+        _schema_variant_bindings(2))      # evicts 1, not 0
+    traces = cache.stats().traces
+    cp0.run(_schema_variant_bindings(0))
+    assert cache.stats().traces == traces  # 0 still warm
+    cp1.run(_schema_variant_bindings(1))
+    assert cache.stats().traces == traces + 1  # 1 was the victim
+
+
+def test_cache_resize_evicts_and_clear_resets():
+    cache = ExecutableCache(maxsize=4)
+    for i in range(3):
+        compile_plan(_schema_variant_flow(i), cache=cache).run(
+            _schema_variant_bindings(i))
+    cache.resize(1)
+    s = cache.stats()
+    assert s.size == 1 and s.evictions == 2
+    cache.clear()
+    s = cache.stats()
+    assert (s.size, s.hits, s.misses, s.traces, s.evictions) == (0,) * 5
+
+
+def test_cache_capacity_env_tunable(monkeypatch):
+    from repro.core.pipeline import EXEC_CACHE_CAP_ENV
+    monkeypatch.setenv(EXEC_CACHE_CAP_ENV, "7")
+    assert ExecutableCache().maxsize == 7
+    monkeypatch.setenv(EXEC_CACHE_CAP_ENV, "not-a-number")
+    assert ExecutableCache().maxsize == 256  # default survives bad input
+    monkeypatch.setenv(EXEC_CACHE_CAP_ENV, "0")
+    assert ExecutableCache().maxsize == 1  # floor: a cache must cache
+    monkeypatch.delenv(EXEC_CACHE_CAP_ENV)
+    assert ExecutableCache().maxsize == 256
+    assert ExecutableCache(maxsize=3).maxsize == 3  # explicit arg wins
+
+
+# ---------------------------------------------------------------------------
 # Capacity bucketing
 # ---------------------------------------------------------------------------
 def test_bucket_capacity_ladder():

@@ -76,6 +76,45 @@ def test_flowgen_masked_matches_eager(seed):
 
 
 # ---------------------------------------------------------------------------
+# Adaptive serving differential harness (DESIGN.md §9): adversarial hints +
+# drifting per-batch distributions, bit-identical across every plan swap
+# ---------------------------------------------------------------------------
+def test_flowgen_adaptive_serve_bit_identical_and_replans():
+    """Random flows with every hint perturbed by up to 100x (underestimates
+    included) served through an adaptive CompiledPlan over a workload whose
+    distributions shift mid-serve: every batch — across calibration swaps
+    and truncation re-runs — must be bit-identical to the eager reference
+    (asserted per batch inside the harness).  The summed swap count guards
+    against vacuity: a workload that never drifts past the trigger would
+    pass the identity check without exercising a single re-plan."""
+    total = 0
+    for seed in (0, 1, 2, 4):
+        root, make_bindings = flowgen.random_flow(seed)
+        adv = flowgen.adversarial_hints(root, seed + 500)
+        total += flowgen.assert_adaptive_identical(adv, make_bindings, seed)
+    assert total >= 3
+
+
+def test_adversarial_hints_seeded_and_semantics_preserving():
+    root, _ = flowgen.random_flow(3)
+    a1 = flowgen.adversarial_hints(root, 42)
+    a2 = flowgen.adversarial_hints(root, 42)
+    b = flowgen.adversarial_hints(root, 43)
+    h1 = [n.hints for n in a1.iter_nodes() if hasattr(n, "hints")]
+    assert h1 == [n.hints for n in a2.iter_nodes() if hasattr(n, "hints")]
+    assert h1 != [n.hints for n in b.iter_nodes() if hasattr(n, "hints")]
+    # pk_side (an execution-semantic hint) is never perturbed
+    for orig, adv in zip(root.iter_nodes(), a1.iter_nodes()):
+        if hasattr(orig, "hints"):
+            assert adv.hints.pk_side == orig.hints.pk_side
+    # the perturbation changes only hints, never the answer
+    _, make_bindings = flowgen.random_flow(3)
+    data = make_bindings(99)
+    assert flowgen.canonical_rows(executor.execute(a1, data)) == \
+        flowgen.canonical_rows(executor.execute(root, data))
+
+
+# ---------------------------------------------------------------------------
 # Hypothesis unary-chain strategy (optional dependency)
 # ---------------------------------------------------------------------------
 def _modify(target, reads, mult, off):
