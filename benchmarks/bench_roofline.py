@@ -1,7 +1,17 @@
-"""Beyond-paper: roofline table from the multi-pod dry-run artifacts.
+"""Beyond-paper: roofline tables — model dry-run artifacts AND dataflow
+stages.
 
-Reads results/dryrun_singlepod.json (produced by repro.launch.dryrun) and
-prints the per-(arch × shape) three-term roofline — no recompilation here.
+Two sections:
+
+* model cells: reads results/dryrun_singlepod.json (produced by
+  repro.launch.dryrun) and prints the per-(arch × shape) three-term
+  roofline — no recompilation there.
+* dataflow stages: compiles the serving flows, times every lowered stage
+  warm (`bench_pipeline._stage_breakdown`) and reports achieved HBM
+  bytes/s against the `hw.CHIP` memory-bandwidth roof — the
+  `roofline_fraction` each stage row also carries in BENCH_pipeline.json.
+  Stages the route planner fuses into a megakernel span are marked
+  `route=mega` (DESIGN.md §10).
 """
 
 from __future__ import annotations
@@ -14,29 +24,59 @@ from . import common
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
                        "dryrun_singlepod.json")
 
+DATAFLOW_ROWS = 16_000  # measure at the crossover-gated batch size
+
+
+def _dataflow_rows(quick: bool) -> list:
+    """Per-stage achieved-bandwidth rows for the serving flows."""
+    from repro.configs import flows
+    from repro.core.pipeline import compile_plan
+
+    from .bench_pipeline import _stage_breakdown
+
+    names = ("q15",) if quick else ("q15", "clickstream", "textmining")
+    rows = []
+    for name in names:
+        root, mk = flows.FLOWS[name]()
+        cp = compile_plan(root)
+        b = mk(DATAFLOW_ROWS, seed=7)
+        cp.run(b)  # trace once so the breakdown times warm stages
+        staged = cp.bind_device(b)
+        for r in _stage_breakdown(cp, staged):
+            rows.append({"flow": name, "op": r["op"], "stage": r["stage"],
+                         "route": r["route"], "ms": r["ms"],
+                         "bytes": r["bytes"],
+                         "achieved_gbps": r["achieved_gbps"],
+                         "roofline_fraction": r["roofline_fraction"]})
+    return rows
+
 
 def run(quick: bool = False, path: str = RESULTS):
+    rows = []
     if not os.path.exists(path):
         print(f"bench_roofline: {path} not found — run "
               "`python -m repro.launch.dryrun --mesh single --out "
               "results/dryrun_singlepod.json` first")
-        return {"name": "roofline", "cells": 0}
-    rows = []
-    for cell in json.load(open(path)):
-        if "roofline" not in cell:
-            continue
-        rl = cell["roofline"]
-        rows.append({
-            "arch": cell["arch"], "shape": cell["shape"],
-            "t_compute_ms": rl["t_compute_s"] * 1e3,
-            "t_memory_ms": rl["t_memory_s"] * 1e3,
-            "t_collective_ms": rl["t_collective_s"] * 1e3,
-            "bottleneck": rl["bottleneck"],
-            "useful_ratio": rl["useful_ratio"],
-            "roofline_fraction": rl["roofline_fraction"],
-        })
-    common.print_rows("bench_roofline (dry-run derived)", rows)
-    return {"name": "roofline", "cells": len(rows)}
+    else:
+        for cell in json.load(open(path)):
+            if "roofline" not in cell:
+                continue
+            rl = cell["roofline"]
+            rows.append({
+                "arch": cell["arch"], "shape": cell["shape"],
+                "t_compute_ms": rl["t_compute_s"] * 1e3,
+                "t_memory_ms": rl["t_memory_s"] * 1e3,
+                "t_collective_ms": rl["t_collective_s"] * 1e3,
+                "bottleneck": rl["bottleneck"],
+                "useful_ratio": rl["useful_ratio"],
+                "roofline_fraction": rl["roofline_fraction"],
+            })
+        common.print_rows("bench_roofline (dry-run derived)", rows)
+    stage_rows = _dataflow_rows(quick)
+    common.print_rows("bench_roofline (dataflow stages vs HBM roof)",
+                      stage_rows)
+    return {"name": "roofline", "cells": len(rows),
+            "dataflow_stages": stage_rows}
 
 
 if __name__ == "__main__":

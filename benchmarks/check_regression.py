@@ -37,6 +37,7 @@ them without code changes:
     BENCH_MIN_SHUFFLE_REDUCTION    aggregation reduction floor   (default 3.0)
     BENCH_MIN_PIPELINE_VS_EAGER    serving-vs-eager rate floor   (default 1.0)
     BENCH_MIN_ADAPTIVE_RECOVERY    post-swap/oracle rate floor   (default 0.8)
+    BENCH_MIN_CROSSOVER_16K        16k-row serving/eager floor   (default 1.0)
 """
 
 from __future__ import annotations
@@ -163,6 +164,43 @@ def check_pipeline_vs_eager(floor: float, errors: list[str]) -> None:
                   f"{', '.join(EAGER_GATED_FLOWS)} (floor {floor:.2g})")
 
 
+# flows whose 16k-row crossover ratio is gated (>= floor); the other
+# serving flows must still REPORT the point so the sweep stays honest
+CROSSOVER_GATED_FLOWS = ("q15", "clickstream")
+
+
+def check_crossover_16k(floor: float, errors: list[str]) -> None:
+    """Acceptance bar (megakernel serving): the device-resident pipeline
+    must beat eager at the LARGE batch size too — the 16k point is where
+    pre-megakernel serving lost to eager.  Ratio-gated on
+    `CROSSOVER_GATED_FLOWS` in BOTH artifacts; presence-gated everywhere
+    (textmining's eager numpy path has no compaction work to amortize, so
+    its ratio is reported but not yet floored)."""
+    for quick in (False, True):
+        path = baseline_path("pipeline", quick=quick)
+        if not os.path.exists(path):
+            return  # already reported by check_bench
+        tag = "quick" if quick else "baseline"
+        rows = _rows_by_flow(_load(path), "rows")
+        n_before = len(errors)
+        for flow in EAGER_GATED_FLOWS:
+            row = rows.get(flow)
+            if row is None:
+                continue  # reported by check_pipeline_vs_eager
+            pt = (row.get("crossover") or {}).get("16000")
+            if pt is None:
+                errors.append(f"pipeline[{tag}]/{flow}: crossover sweep "
+                              "missing the 16000-row point")
+            elif flow in CROSSOVER_GATED_FLOWS and pt < floor:
+                errors.append(
+                    f"pipeline[{tag}]/{flow}: 16k crossover {pt:.4g} below "
+                    f"floor {floor:.2g}")
+        if len(errors) == n_before:
+            print(f"ok pipeline[{tag}]: 16k crossover >= {floor:.2g} on "
+                  f"{', '.join(CROSSOVER_GATED_FLOWS)}, point reported on "
+                  f"{', '.join(EAGER_GATED_FLOWS)}")
+
+
 def check_fusion_floor(min_speedup: float, errors: list[str]) -> None:
     base_path = baseline_path("pipeline", quick=False)
     if not os.path.exists(base_path):
@@ -248,6 +286,9 @@ def main() -> None:
     ap.add_argument("--min-adaptive-recovery", type=float, default=float(
         os.environ.get("BENCH_MIN_ADAPTIVE_RECOVERY", "0.8")),
         help="required post-swap vs oracle-plan throughput floor")
+    ap.add_argument("--min-crossover-16k", type=float, default=float(
+        os.environ.get("BENCH_MIN_CROSSOVER_16K", "1.0")),
+        help="required serving-vs-eager ratio at the 16k batch size")
     args = ap.parse_args()
 
     errors: list[str] = []
@@ -257,6 +298,7 @@ def main() -> None:
     check_aggregation_floor(args.min_shuffle_reduction, errors)
     check_pipeline_vs_eager(args.min_pipeline_vs_eager, errors)
     check_adaptive_recovery(args.min_adaptive_recovery, errors)
+    check_crossover_16k(args.min_crossover_16k, errors)
 
     if errors:
         print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)

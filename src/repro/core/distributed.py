@@ -149,9 +149,11 @@ def _exec_stages(stages, shards: Mapping[str, M.MaskedBatch],
                  axis: str, p: int, use_kernels: bool,
                  stats_memo: dict, slack: float,
                  root: Node, use_order: bool = True,
-                 observe: Optional[list] = None) -> M.MaskedBatch:
+                 observe: Optional[list] = None,
+                 use_megakernel: bool = True) -> M.MaskedBatch:
     from . import pipeline as PL
     from .cost import seed_source_stats
+    from ..kernels import megakernel as MK
 
     # runtime re-estimation (same as the local pipeline body): price every
     # compaction at the GLOBAL scale of the batches actually bound — a shard
@@ -162,45 +164,83 @@ def _exec_stages(stages, shards: Mapping[str, M.MaskedBatch],
     def compact(b: M.MaskedBatch, n: Node) -> M.MaskedBatch:
         return M.compact_to_estimate(b, n, stats_memo, slack, shards=p)
 
-    results: list[M.MaskedBatch] = []
-    for st in stages:
+    # fused-span routing (DESIGN.md §10): require_forward keeps every
+    # collective at a SOLO stage input, so a mega span runs the identical
+    # kernel on every shard with no communication inside it
+    routes = None
+    if use_megakernel and len(stages) >= 2:
+        routes = MK.plan_routes(stages,
+                                {n: b.capacity for n, b in shards.items()},
+                                require_forward=True)
+
+    results: list[Optional[M.MaskedBatch]] = [None] * len(stages)
+
+    def resolve(st, t, ref, how, order_t):
         node = st.top
-        in_orders = st.in_orders or ((),) * len(st.inputs)
-        ins = []
-        for i, (ref, how) in enumerate(zip(st.inputs, st.ship)):
-            b = shards[ref[1]] if ref[0] == "source" else results[ref[1]]
-            if how == "forward":
-                # only forwarded streams keep their per-shard order; the
-                # collectives below interleave rows, and _repartition /
-                # _broadcast construct order-free batches accordingly
-                if use_order and in_orders[i] and not b.order:
-                    b = b.with_order(in_orders[i])
-            elif how == "partition":
-                if isinstance(node, ReduceOp):
-                    keys = node.key
-                elif isinstance(node, (MatchOp, CoGroupOp)):
-                    keys = node.left_key if i == 0 else node.right_key
-                else:
-                    raise ValueError(f"partition ship on {type(node).__name__}")
-                b = compact(_repartition(b, keys, axis, p),
-                            st.input_plans[i].node)
-            elif how == "broadcast":
-                b = _broadcast(b, axis, p)
+        b = shards[ref[1]] if ref[0] == "source" else results[ref[1]]
+        if how == "forward":
+            # only forwarded streams keep their per-shard order; the
+            # collectives below interleave rows, and _repartition /
+            # _broadcast construct order-free batches accordingly
+            if use_order and order_t and not b.order:
+                b = b.with_order(order_t)
+        elif how == "partition":
+            if isinstance(node, ReduceOp):
+                keys = node.key
+            elif isinstance(node, (MatchOp, CoGroupOp)):
+                keys = node.left_key if t == 0 else node.right_key
             else:
-                raise ValueError(how)
-            ins.append(b)
-        obs: Optional[dict] = {} if observe is not None else None
-        out = PL.execute_stage(st, ins, use_kernels, use_order, obs)
-        if observe is not None:
-            # global (cross-shard) boundary counts: per-shard valid rows and
-            # KAT/Match side-channels summed over the mesh axis — the
-            # distributed leg of the adaptive feedback loop (DESIGN.md §9),
-            # aggregated exactly where shuffle_stats counts the wire
-            observe.append((
-                jax.lax.psum(jnp.sum(out.valid.astype(jnp.int32)), axis),
-                jax.lax.psum(obs["groups"], axis)
-                if "groups" in obs else jnp.int32(-1)))
-        results.append(compact(out, node))
+                raise ValueError(f"partition ship on {type(node).__name__}")
+            b = compact(_repartition(b, keys, axis, p),
+                        st.input_plans[t].node)
+        elif how == "broadcast":
+            b = _broadcast(b, axis, p)
+        else:
+            raise ValueError(how)
+        return b
+
+    def psum_obs(count, aux, has_aux):
+        # global (cross-shard) boundary counts: per-shard valid rows and
+        # KAT/Match side-channels summed over the mesh axis — the
+        # distributed leg of the adaptive feedback loop (DESIGN.md §9),
+        # aggregated exactly where shuffle_stats counts the wire.  Aux-free
+        # stages keep the composed convention of an un-psum'd -1.
+        return (jax.lax.psum(count, axis),
+                jax.lax.psum(aux, axis) if has_aux else jnp.int32(-1))
+
+    entries = routes or tuple(("solo", i) for i in range(len(stages)))
+    for entry in entries:
+        if entry[0] == "solo":
+            i = entry[1]
+            st = stages[i]
+            in_orders = st.in_orders or ((),) * len(st.inputs)
+            ins = [resolve(st, t, ref, how, in_orders[t])
+                   for t, (ref, how) in enumerate(zip(st.inputs, st.ship))]
+            obs: Optional[dict] = {} if observe is not None else None
+            out = PL.execute_stage(st, ins, use_kernels, use_order, obs)
+            if observe is not None:
+                observe.append(psum_obs(
+                    jnp.sum(out.valid.astype(jnp.int32)),
+                    obs.get("groups", jnp.int32(-1)), "groups" in obs))
+            results[i] = compact(out, st.top)
+        else:
+            _, i, j = entry
+            span = stages[i:j]
+            ins_per = []
+            for k, st in enumerate(span):
+                in_orders = st.in_orders or ((),) * len(st.inputs)
+                ins_per.append([
+                    None if (ref == ("stage", i + k - 1) and k > 0)
+                    else resolve(st, t, ref, how, in_orders[t])
+                    for t, (ref, how) in enumerate(zip(st.inputs, st.ship))])
+            planned = [M.planned_capacity(st.top, stats_memo, slack,
+                                          shards=p) for st in span]
+            raw, span_obs, _ = MK.run_span(span, ins_per, planned,
+                                           use_kernels, use_order)
+            if observe is not None:
+                observe.extend(psum_obs(c, a, h) for (c, a), h in
+                               zip(span_obs, MK.span_has_aux(span)))
+            results[j - 1] = compact(raw, span[-1].top)
     return results[-1]
 
 
@@ -212,7 +252,8 @@ def execute_distributed(plan: PhysPlan, bindings: Mapping[str, RecordBatch],
                         use_kernels: bool = False, slack: float = 4.0,
                         out_capacity: Optional[int] = None,
                         use_order: bool = True,
-                        stats_store=None) -> RecordBatch:
+                        stats_store=None,
+                        use_megakernel: Optional[bool] = None) -> RecordBatch:
     """Execute a physical plan data-parallel over `mesh[axis]`.
 
     Sharding preserves per-shard order for sorted sources: both the
@@ -267,6 +308,8 @@ def execute_distributed(plan: PhysPlan, bindings: Mapping[str, RecordBatch],
 
     from . import pipeline as PL
 
+    if use_megakernel is None:
+        use_megakernel = PL._megakernel_default()
     stages = PL.lower_phys(plan)
     stats_memo: dict = {}
     names = sorted(global_batches)
@@ -285,7 +328,7 @@ def execute_distributed(plan: PhysPlan, bindings: Mapping[str, RecordBatch],
         else:
             out = _exec_stages(stages, local, axis, p, use_kernels,
                                stats_memo, slack, plan.node, use_order,
-                               observe)
+                               observe, use_megakernel)
         if stats_store is None:
             return out
         # psum'd counts are replicated over the axis, so they leave the

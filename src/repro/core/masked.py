@@ -129,17 +129,15 @@ class MaskedBatch:
     def compact(self, capacity: int) -> "MaskedBatch":
         """Re-pack valid rows first and truncate/grow to `capacity`.
 
-        Prefix-sum pack: `cumsum(valid)` gives each output slot's source row
-        (found by monotone vectorized binary search), then one gather per
-        column — no comparator sort.  Stable by construction (positions are
-        strictly increasing in source order), so it PRESERVES `order`;
-        slots past the valid count hold clamped garbage under valid=False."""
-        cv = scans.cumsum(self.valid.astype(jnp.int32))
-        src = jnp.searchsorted(
-            cv, jnp.arange(1, capacity + 1, dtype=jnp.int32))
-        src = jnp.minimum(src, self.capacity - 1)
+        Prefix-sum pack (`scans.pack_indices`): `cumsum(valid)` gives each
+        output slot's source row (found by monotone vectorized binary
+        search), then one gather per column — no comparator sort.  Stable by
+        construction (positions are strictly increasing in source order), so
+        it PRESERVES `order`; slots past the valid count hold clamped
+        garbage under valid=False."""
+        src, count = scans.pack_indices(self.valid, capacity)
         cols = {k: v[src] for k, v in self.columns.items()}
-        valid = jnp.arange(capacity, dtype=jnp.int32) < cv[-1]
+        valid = jnp.arange(capacity, dtype=jnp.int32) < count
         return MaskedBatch(cols, valid, self.order)
 
 
@@ -316,17 +314,29 @@ def _exec_map(op: MapOp, b: MaskedBatch) -> MaskedBatch:
 
 def _exec_reduce(op: ReduceOp, b: MaskedBatch, use_kernels: bool,
                  use_order: bool = True,
-                 obs: Optional[dict] = None) -> MaskedBatch:
+                 obs: Optional[dict] = None,
+                 contiguous: bool = False) -> MaskedBatch:
     """`obs`, when given, receives the traced observed group count under
     key "groups" — the stage-boundary statistic the adaptive feedback loop
     calibrates `distinct_keys` from (DESIGN.md §9).  It costs one reduction
-    over a mask already computed for segment numbering."""
+    over a mask already computed for segment numbering.
+
+    `contiguous` asserts the caller just PACKED `b` (valid rows form a
+    prefix, e.g. a megakernel interior compaction, DESIGN.md §10): when the
+    order also covers the key, segmentation uses adjacent-slot compares
+    instead of the gap-tolerant cummax walk.  On a valids-first batch the
+    two produce identical `(seg, is_start)` arrays — the previous valid row
+    IS the adjacent slot — so results are bit-identical, minus the cummax
+    and the gather it feeds."""
     key = tuple(op.key)
     if use_order and order_covers(b.order, key):
         # input already groups equal keys contiguously: segment directly over
         # the (possibly gappy) slots, no sort, no repack
         sb = b
-        seg, is_start = _segments_gappy(b.columns, key, b.valid)
+        if contiguous:
+            seg, is_start = _segments_contiguous(b.columns, key, b.valid)
+        else:
+            seg, is_start = _segments_gappy(b.columns, key, b.valid)
         base_order = b.order
     else:
         sb, seg, is_start = _sort_by_key(b, key)

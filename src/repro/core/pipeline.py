@@ -51,6 +51,17 @@ the fused pipeline beats eager execution outright (bench_pipeline's
 The same lowering drives `distributed.execute_distributed`: per-shard local
 work executes the fused stages, with shipping collectives at stage inputs.
 
+Whole-stage megakernels (DESIGN.md §10): runs of single-consumer
+chain/reduce/PK-match stages whose working set fits VMEM are routed through
+`kernels.megakernel` — one fused span body with dead-column pruning at
+interior compactions and contiguity-aware segmentation, dispatched as a
+single whole-block Pallas call on TPU (inline XLA otherwise).  Routes are
+planned per source signature and fingerprinted (with the dispatch mode)
+into the executable-cache key; `use_megakernel` joins the semantic
+fingerprint, so fused and composed traces never share an executable.
+Non-fusable shapes (Cross, CoGroup, hint-less Match, shared intermediates,
+non-blockable capacities, VMEM overruns) fall back to the composed walk.
+
 Adaptive serving (DESIGN.md §9): with an `AdaptiveConfig`, every executed
 batch also returns its stage-boundary valid-row counts (free — the
 compaction prefix sum computes them anyway) into a per-handle
@@ -471,13 +482,17 @@ class _Interned:
 # ---------------------------------------------------------------------------
 def execute_stage(stage: Stage, ins: Sequence[M.MaskedBatch],
                   use_kernels: bool, use_order: bool = True,
-                  obs: Optional[dict] = None) -> M.MaskedBatch:
+                  obs: Optional[dict] = None,
+                  contiguous_in: bool = False) -> M.MaskedBatch:
     """Run one stage's local (per-worker) computation on masked batches.
 
     Order elision keys off the input batches' `order` metadata; callers
     attach `stage.in_orders` (for forwarded inputs) before invoking.
     `obs`, when given, receives the stage's KAT/Match side-channel counts
-    (observed groups / probe hits) for the adaptive feedback loop."""
+    (observed groups / probe hits) for the adaptive feedback loop.
+    `contiguous_in` asserts the first input was just prefix-packed (a
+    megakernel interior boundary): a Reduce then segments with adjacent
+    compares instead of the gap-tolerant cummax walk, bit-identically."""
     if stage.kind == "chain":
         b = ins[0]
         for op in stage.ops:
@@ -485,7 +500,8 @@ def execute_stage(stage: Stage, ins: Sequence[M.MaskedBatch],
         return b
     node = stage.top
     if stage.kind == "reduce":
-        return M._exec_reduce(node, ins[0], use_kernels, use_order, obs)
+        return M._exec_reduce(node, ins[0], use_kernels, use_order, obs,
+                              contiguous=contiguous_in)
     if stage.kind == "match":
         lb, rb = ins
         if node.hints.pk_side == "right":
@@ -515,7 +531,8 @@ def run_stages(stages: Sequence[Stage], bindings: Mapping[str, M.MaskedBatch],
                use_kernels: bool, compact_slack: float,
                stats_memo: dict, scale: float = 1.0,
                use_order: bool = True, observe: Optional[list] = None,
-               caps: Optional[list] = None) -> M.MaskedBatch:
+               caps: Optional[list] = None,
+               routes: Optional[tuple] = None) -> M.MaskedBatch:
     """Execute a lowered stage list on masked batches (traceable).
 
     Compaction fires once per stage boundary (not per fused operator), to
@@ -531,28 +548,70 @@ def run_stages(stages: Sequence[Stage], bindings: Mapping[str, M.MaskedBatch],
     group/hit count from the KAT/Match executors (int32 -1 when the stage
     has none).  `caps` (trace-time, static) records the capacity each stage
     compacts to, the reference for host-side truncation detection.
+
+    `routes` (from `kernels.megakernel.plan_routes`, DESIGN.md §10) routes
+    runs of stages through the fused megakernel span executor; None (or a
+    "solo" entry) is the composed per-stage walk.  A mega span appends the
+    SAME per-stage observe/caps entries as the composed walk — stage
+    indices, `StatsStore` keys and truncation detection are route-agnostic.
     """
-    results: list[M.MaskedBatch] = []
-    for st in stages:
-        ins = []
-        orders = st.in_orders or ((),) * len(st.inputs)
-        for ref, o in zip(st.inputs, orders):
-            b = bindings[ref[1]] if ref[0] == "source" else results[ref[1]]
-            if use_order and o and not b.order:
-                b = b.with_order(o)
-            ins.append(b)
-        obs: Optional[dict] = {} if observe is not None else None
-        out = execute_stage(st, ins, use_kernels, use_order, obs)
+    results: list[Optional[M.MaskedBatch]] = [None] * len(stages)
+
+    def resolve(ref: tuple, o: tuple) -> M.MaskedBatch:
+        b = bindings[ref[1]] if ref[0] == "source" else results[ref[1]]
+        if use_order and o and not b.order:
+            b = b.with_order(o)
+        return b
+
+    def boundary(st: Stage, out: M.MaskedBatch, obs: Optional[dict],
+                 count=None):
         cap = min(out.capacity,
                   M.planned_capacity(st.top, stats_memo, compact_slack,
                                      scale))
         if caps is not None:
             caps.append(cap)
         if observe is not None:
-            observe.append((jnp.sum(out.valid.astype(jnp.int32)),
-                            obs.get("groups", jnp.int32(-1))))
-        results.append(out.compact(cap) if cap < out.capacity else out)
-    return results[-1]
+            if obs is not None:  # composed stage: count computed here
+                observe.append((jnp.sum(out.valid.astype(jnp.int32)),
+                                obs.get("groups", jnp.int32(-1))))
+            else:  # mega span tail: count already computed in-span
+                observe.append(count)
+        return out.compact(cap) if cap < out.capacity else out
+
+    entries = routes or tuple(("solo", i) for i in range(len(stages)))
+    last: Optional[M.MaskedBatch] = None
+    for entry in entries:
+        if entry[0] == "solo":
+            i = entry[1]
+            st = stages[i]
+            orders = st.in_orders or ((),) * len(st.inputs)
+            ins = [resolve(r, o) for r, o in zip(st.inputs, orders)]
+            obs: Optional[dict] = {} if observe is not None else None
+            out = execute_stage(st, ins, use_kernels, use_order, obs)
+            last = results[i] = boundary(st, out, obs)
+        else:
+            from ..kernels import megakernel as MK
+
+            _, i, j = entry
+            span = stages[i:j]
+            ins_per = []
+            for k, st in enumerate(span):
+                orders = st.in_orders or ((),) * len(st.inputs)
+                ins_per.append([
+                    None if (r == ("stage", i + k - 1) and k > 0)
+                    else resolve(r, o)
+                    for r, o in zip(st.inputs, orders)])
+            planned = [M.planned_capacity(st.top, stats_memo, compact_slack,
+                                          scale) for st in span]
+            raw, span_obs, applied = MK.run_span(span, ins_per, planned,
+                                                 use_kernels, use_order)
+            if caps is not None:
+                caps.extend(applied)
+            if observe is not None:
+                observe.extend(span_obs[:-1])
+            last = results[j - 1] = boundary(span[-1], raw, None,
+                                             count=span_obs[-1])
+    return last
 
 
 def record_batch_obs(store: StatsStore, stages: Sequence[Stage],
@@ -698,6 +757,17 @@ def executable_cache() -> ExecutableCache:
     return _CACHE
 
 
+# megakernel routing is on by default; `REPRO_MEGAKERNEL=0` is the global
+# kill switch (falls back to the composed per-stage walk everywhere)
+MEGAKERNEL_ENV = "REPRO_MEGAKERNEL"
+
+_MISSING = object()  # routes memo sentinel (None is a valid cached value)
+
+
+def _megakernel_default() -> bool:
+    return os.environ.get(MEGAKERNEL_ENV, "1") != "0"
+
+
 def _schema_sig(schema) -> tuple:
     return (tuple(schema.fields),
             tuple(str(schema.dtype(f)) for f in schema.fields))
@@ -769,6 +839,8 @@ class CompiledPlan:
     use_kernels: bool = False
     compact_slack: float = 2.0
     use_order: bool = True
+    use_megakernel: bool = dataclasses.field(
+        default_factory=lambda: _megakernel_default())
     cache: ExecutableCache = dataclasses.field(default_factory=executable_cache)
     adaptive: Optional[AdaptiveConfig] = None
     stats: Optional[StatsStore] = None
@@ -776,8 +848,18 @@ class CompiledPlan:
     def __post_init__(self):
         self._sources = {n.name: n for n in self.flow.iter_nodes()
                          if isinstance(n, Source)}
+        # `use_megakernel` is part of the semantic identity: fused and
+        # composed lowerings of one flow must never share an executable.
+        # The capacity-dependent route itself joins the cache key in
+        # `_executable` (routes are planned per source signature).
         self._sem = _Interned((semantic_key(self.flow),
-                               _order_sig(self.stages)))
+                               _order_sig(self.stages),
+                               self.use_megakernel))
+        # route planning is deterministic in (stages, capacities) but costs
+        # ~50us of host time — too much to pay per warm dispatch.  Memoized
+        # per capacity signature; `_install` re-runs this initializer, so a
+        # hot-swap starts from a fresh memo for the new stage list.
+        self._routes_memo: dict = {}
         # static per-source schema signatures, computed once: stringifying
         # dtypes per call costs more than the warm serving step itself
         self._ssig = {name: _schema_sig(src.out_schema)
@@ -845,10 +927,37 @@ class CompiledPlan:
         return out, tuple(sig)
 
     # -- executable lookup ---------------------------------------------------
+    def _routes(self, src_caps: Mapping[str, int]) -> Optional[tuple]:
+        """Megakernel route plan for the given source capacities (None when
+        nothing fuses).  Deterministic in (stages, capacities), so one
+        source signature always maps to one route — and recomputed from
+        scratch after every `_install` hot-swap, which is what keeps a
+        truncation force-swap on the megakernel route (DESIGN.md §10)."""
+        if not self.use_megakernel or len(self.stages) < 2:
+            return None
+        key = tuple(sorted(src_caps.items()))
+        hit = self._routes_memo.get(key, _MISSING)
+        if hit is _MISSING:
+            from ..kernels import megakernel as MK
+
+            hit = MK.plan_routes(self.stages, dict(src_caps))
+            self._routes_memo[key] = hit
+        return hit
+
     def _executable(self, source_sig: tuple, donate: bool = False):
         observe = self.adaptive is not None
+        routes = self._routes({s[0]: s[2] for s in source_sig})
+        mode = None
+        if routes is not None:
+            from ..kernels import megakernel as MK
+
+            mode = MK.dispatch_mode()
+        self._last_routes = routes  # introspection (tests, benchmarks)
+        # routes + dispatch mode join the key: a route change (different
+        # capacities fuse differently) or a dispatch change (pallas vs
+        # inline-xla) traces a different program
         key = (self._sem, source_sig, self.use_kernels, self.compact_slack,
-               self.use_order, donate, observe)
+               self.use_order, donate, observe, routes, mode)
         fn = self.cache.get(key)
         if fn is None:
             stages, use_kernels = self.stages, self.use_kernels
@@ -878,11 +987,12 @@ class CompiledPlan:
                     flow, {n: b.capacity for n, b in mb.items()}, {})
                 if not observe:
                     return run_stages(stages, mb, use_kernels, slack,
-                                      stats_memo, use_order=use_order)
+                                      stats_memo, use_order=use_order,
+                                      routes=routes)
                 obs_list: list = []
                 out = run_stages(stages, mb, use_kernels, slack, stats_memo,
                                  use_order=use_order, observe=obs_list,
-                                 caps=stage_caps)
+                                 caps=stage_caps, routes=routes)
                 # one packed int32 vector — [sources (name-sorted), per-stage
                 # out counts, per-stage aux] — so the per-call observation
                 # read is a SINGLE small transfer, not one per scalar
@@ -1068,7 +1178,9 @@ class CompiledPlan:
             self.flow, {n: b.capacity for n, b in masked.items()}, {})
         return run_stages(self.stages, masked, self.use_kernels,
                           self.compact_slack, stats_memo,
-                          use_order=self.use_order)
+                          use_order=self.use_order,
+                          routes=self._routes(
+                              {n: b.capacity for n, b in masked.items()}))
 
     def cache_stats(self) -> CacheStats:
         return self.cache.stats()
@@ -1079,18 +1191,24 @@ def compile_plan(flow_or_plan, use_kernels: bool = False,
                  cache: Optional[ExecutableCache] = None,
                  use_order: bool = True,
                  adaptive: Optional[AdaptiveConfig] = None,
-                 stats: Optional[StatsStore] = None) -> CompiledPlan:
+                 stats: Optional[StatsStore] = None,
+                 use_megakernel: Optional[bool] = None) -> CompiledPlan:
     """Lower a logical flow — or a `PhysPlan`, whose shipping strategies and
     physical `Props` then thread into the stages — into a `CompiledPlan`
     ready for repeated execution.  Pass an `AdaptiveConfig` to serve with
     observed-cardinality feedback and drift-triggered plan swaps
     (DESIGN.md §9); `stats` optionally shares a `StatsStore` across handles
-    (e.g. seeded from a previous serving session)."""
+    (e.g. seeded from a previous serving session).  `use_megakernel`
+    (default on; `REPRO_MEGAKERNEL=0` disables globally) routes fusable
+    stage runs through the whole-stage megakernel (DESIGN.md §10)."""
     if isinstance(flow_or_plan, PhysPlan):
         flow, stages = flow_or_plan.node, lower_phys(flow_or_plan)
     else:
         flow, stages = flow_or_plan, lower(flow_or_plan)
+    if use_megakernel is None:
+        use_megakernel = _megakernel_default()
     return CompiledPlan(flow=flow, stages=stages,
                         use_kernels=use_kernels, compact_slack=compact_slack,
-                        use_order=use_order, cache=cache or _CACHE,
+                        use_order=use_order, use_megakernel=use_megakernel,
+                        cache=cache or _CACHE,
                         adaptive=adaptive, stats=stats)

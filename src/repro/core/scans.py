@@ -43,6 +43,21 @@ def _blockable(n: int) -> bool:
     return n >= 2 * _BLOCK and n % _BLOCK == 0
 
 
+def pack_indices(valid: jnp.ndarray, capacity: int):
+    """Gather indices of the stable valids-first prefix pack.
+
+    Returns `(src, count)`: `src[i]` is the source slot of output slot `i`
+    under the pack that moves valid rows to the front in original order
+    (slots past `count` hold a clamped repeat of the last row and must be
+    masked by the caller).  This is THE compaction inner loop — shared by
+    `MaskedBatch.compact` and the megakernel's pruned interior compactions —
+    a blocked cumsum over the mask plus one monotone vectorized binary
+    search, no comparator sort."""
+    cv = cumsum(valid.astype(jnp.int32))
+    src = jnp.searchsorted(cv, jnp.arange(1, capacity + 1, dtype=jnp.int32))
+    return jnp.minimum(src, valid.shape[0] - 1), cv[-1]
+
+
 def cumsum(v: jnp.ndarray) -> jnp.ndarray:
     """Inclusive cumulative sum, blocked two-level."""
     n = v.shape[0]

@@ -1,0 +1,352 @@
+"""Whole-stage megakernels: fuse a run of pipeline stages into one body
+that keeps the batch block-resident across stage boundaries (DESIGN.md §10).
+
+The composed pipeline (`pipeline.run_stages`) already jit-compiles every
+stage into one XLA computation, but each stage boundary still materializes
+the FULL intermediate: the boundary compaction gathers every column the
+producer emits, and the downstream segmentation re-walks validity gaps with
+a cummax scan.  A fused span removes both costs without changing a single
+result bit:
+
+* **Dead-column pruning** — before an interior compaction the producer's
+  columns are intersected with what the consuming stage can observe: its
+  SCA effective read set (`reorder.eff_reads`, which includes its keys)
+  plus every field its operators re-emit (`out_schema`, covering KAT
+  passthrough and `ir.copy()`-style projections whose reads SCA cannot
+  narrow).  Dead columns skip the compaction gather entirely.  Order
+  metadata is truncated to the surviving prefix; elision decisions cannot
+  flip because `order_covers` only inspects the key-length prefix and keys
+  are always live, and the span OUTPUT's order metadata provably equals the
+  composed path's (a pruned column is absent from the consumer's output
+  fields, where the composed `order_prefix` stops anyway).
+
+* **Contiguity exploitation** — an interior compaction leaves valid rows as
+  a prefix, so the next Reduce segments with adjacent-slot compares
+  (`masked._segments_contiguous`) instead of the gap-tolerant cummax walk —
+  bit-identical on a packed batch (the previous valid row IS the adjacent
+  slot).
+
+The span body reuses the masked executors verbatim (`pipeline.
+execute_stage`), compacts interior boundaries to exactly the capacities the
+composed path would (`masked.planned_capacity` min output capacity), and
+returns the same per-stage `(valid-count, kat-aux)` observation pairs
+`run_stages` emits — the PR-5 adaptive side-channel is preserved
+boundary-for-boundary, so `record_batch_obs`, truncation detection and
+`StatsStore` keys all work unchanged.
+
+Dispatch: on TPU (or under `REPRO_MEGAKERNEL_PALLAS=1`, which CI uses to
+exercise the path in interpret mode on CPU) the whole span body is wrapped
+in a single whole-block `pl.pallas_call` — grid-free, every input pytree
+leaf one full-array ref — so the batch is VMEM-resident across the chain;
+the fusability predicate's budget check keeps resident bytes under
+`hw.CHIP.vmem_bytes`.  Off-TPU the same traceable body inlines into the
+enclosing jit ("xla" mode): both modes trace identical computations, which
+is what makes megakernel-vs-composed bit-identity testable on CPU.
+
+Fallback (`plan_routes`): Cross, CoGroup and hint-less Match stages, spans
+shorter than two stages, multi-consumer interior edges, non-8-blockable
+capacities and VMEM-budget overruns all route "solo" — the composed path,
+byte-for-byte the pre-megakernel behavior.
+"""
+
+from __future__ import annotations
+
+import collections
+import os
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .. import hw
+from ..core import masked as M
+from ..core.reorder import eff_reads
+
+# force the pallas wrapper off-TPU (interpret mode); "0"/unset → backend rule
+PALLAS_ENV = "REPRO_MEGAKERNEL_PALLAS"
+
+
+def dispatch_mode() -> str:
+    """How a fused span executes: "pallas" (one whole-block `pallas_call`,
+    interpret-mode off TPU) or "xla" (the same body inlined into the
+    enclosing jit).  Part of the executable-cache key — the two modes trace
+    different programs."""
+    if os.environ.get(PALLAS_ENV, "") == "1":
+        return "pallas"
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+# ---------------------------------------------------------------------------
+# Fusability predicate + route planning
+# ---------------------------------------------------------------------------
+def _stage_fusable(st) -> bool:
+    if st.kind in ("chain", "reduce"):
+        return True
+    if st.kind == "match":
+        # a hint-less Match executes as a cross product — not fusable
+        return st.top.hints.pk_side in ("left", "right")
+    return False  # cross / cogroup: legacy sides stay composed
+
+
+def _input_nodes(st) -> tuple:
+    if st.kind == "chain":
+        return (st.ops[0].child,)
+    return tuple(st.top.children)
+
+
+def _row_bytes(node) -> int:
+    sch = node.out_schema
+    total = sum(np.dtype(sch.dtype(f)).itemsize for f in sch.fields)
+    return max(total, 8) + 1  # +1: the validity mask
+
+
+def plan_routes(stages: Sequence, src_caps, vmem_bytes: Optional[int] = None,
+                require_forward: bool = False) -> Optional[tuple]:
+    """Partition a lowered stage list into megakernel spans and solo stages.
+
+    Returns a tuple of `("mega", i, j)` (stages[i:j] fused) and
+    `("solo", i)` entries covering the list in order, or None when nothing
+    fuses (the composed path).  A span is a maximal run where
+
+    * every stage kind is fusable (`chain` / `reduce` / PK `match`);
+    * each interior output is consumed ONLY by the next stage (checked
+      against every stage's input refs — shared subtrees stay solo);
+    * every resolvable input capacity is 8-blockable (source capacities come
+      bucketed from `_bind`; arbitrary user-masked batches may not be);
+    * the running resident-bytes estimate (inputs + a same-width output
+      bound per stage, from the operator schemas) fits `vmem_bytes`
+      (default `hw.CHIP.vmem_bytes`) — the VMEM residency budget;
+    * with `require_forward` (the distributed per-shard walk), every span
+      stage ships all inputs `forward` — collectives stay at solo-stage
+      inputs, so the same kernel runs on every shard.
+
+    Deterministic in (stages, src_caps): every shard and every retrace of
+    one source signature computes identical routes.
+    """
+    n = len(stages)
+    if n < 2:
+        return None
+    vmem = vmem_bytes if vmem_bytes is not None else hw.CHIP.vmem_bytes
+    consumers: collections.Counter = collections.Counter()
+    for st in stages:
+        for ref in st.inputs:
+            if ref[0] == "stage":
+                consumers[ref[1]] += 1
+    max_src = max(src_caps.values(), default=8)
+
+    def cap_of(ref) -> int:
+        if ref[0] == "source":
+            return int(src_caps.get(ref[1], max_src))
+        return int(max_src)  # out-of-span stage ref: conservative bound
+
+    def admissible(k: int) -> bool:
+        st = stages[k]
+        if not _stage_fusable(st):
+            return False
+        if any(cap_of(r) % 8 or cap_of(r) < 8 for r in st.inputs):
+            return False
+        if require_forward and any(s != "forward" for s in (st.ship or ())):
+            return False
+        return True
+
+    def resident(k: int) -> int:
+        st = stages[k]
+        caps = [cap_of(r) for r in st.inputs]
+        total = sum(c * _row_bytes(kid)
+                    for c, kid in zip(caps, _input_nodes(st)))
+        return total + max(caps) * _row_bytes(st.top)
+
+    def extends(k: int) -> bool:
+        st = stages[k]
+        if not admissible(k):
+            return False
+        hits = sum(1 for r in st.inputs if r == ("stage", k - 1))
+        # prev's output must flow ONLY into this stage (and must be used)
+        return hits > 0 and consumers[k - 1] == hits
+
+    entries: list = []
+    i = 0
+    while i < n:
+        j = i
+        if admissible(i) and resident(i) <= vmem:
+            budget = resident(i)
+            j = i + 1
+            while j < n and extends(j) and budget + resident(j) <= vmem:
+                budget += resident(j)
+                j += 1
+        if j - i >= 2:
+            entries.append(("mega", i, j))
+            i = j
+        else:
+            entries.append(("solo", i))
+            i += 1
+    if all(e[0] == "solo" for e in entries):
+        return None
+    return tuple(entries)
+
+
+def span_has_aux(span: Sequence) -> tuple:
+    """Which span stages emit a KAT/Match side-channel (static): the
+    distributed walk psums only these, keeping the composed path's
+    convention that aux-free stages report an un-psum'd -1."""
+    return tuple(st.kind != "chain" for st in span)
+
+
+# ---------------------------------------------------------------------------
+# Dead-column pruning (SCA liveness at interior boundaries)
+# ---------------------------------------------------------------------------
+def _live_fields(consumer, fields) -> tuple:
+    """Columns of a producer batch the `consumer` stage can observe: the
+    union over its fused operators of the SCA effective read set (which
+    includes every operator's keys) and the operator's output fields (KAT
+    passthrough projects `dict(sb.columns)` through `out_schema`, and
+    `ir.copy()`-style UDFs re-emit fields SCA does not list as reads)."""
+    live: set = set()
+    for op in consumer.ops:
+        live |= eff_reads(op)
+        live |= set(op.out_schema.fields)
+    return tuple(f for f in fields if f in live)
+
+
+# ---------------------------------------------------------------------------
+# Span execution
+# ---------------------------------------------------------------------------
+def _span_body(span, ins_per_stage, planned_caps, use_kernels, use_order,
+               caps_acc: list):
+    from ..core import pipeline as PL
+
+    prev: Optional[M.MaskedBatch] = None
+    prev_packed = False
+    counts, auxes = [], []
+    out = None
+    for k, (st, raw_ins) in enumerate(zip(span, ins_per_stage)):
+        ins = [prev if b is None else b for b in raw_ins]
+        obs: dict = {}
+        out = PL.execute_stage(st, ins, use_kernels, use_order, obs,
+                               contiguous_in=prev_packed)
+        counts.append(jnp.sum(out.valid.astype(jnp.int32)))
+        auxes.append(jnp.asarray(obs.get("groups", jnp.int32(-1)), jnp.int32))
+        if k == len(span) - 1:
+            break
+        # interior boundary: prune dead columns, compact to exactly the
+        # capacity the composed path would, and record packedness for the
+        # consumer's contiguous segmentation
+        nxt = span[k + 1]
+        live = _live_fields(nxt, out.columns.keys())
+        if len(live) < len(out.columns):
+            out = M.MaskedBatch({f: out.columns[f] for f in live}, out.valid,
+                                M.order_prefix(out.order, live))
+        cap = min(out.capacity, planned_caps[k])
+        caps_acc.append(cap)
+        if cap < out.capacity:
+            out = out.compact(cap)
+            prev_packed = True
+        else:
+            prev_packed = False
+        # attach the lowered order assumption on the in-span edge, exactly
+        # as run_stages does for solo stages
+        orders = nxt.in_orders or ((),) * len(nxt.inputs)
+        for t, b in enumerate(ins_per_stage[k + 1]):
+            if b is None and use_order and orders[t] and not out.order:
+                out = out.with_order(orders[t])
+                break
+        prev = out
+    return out, tuple(counts), tuple(auxes)
+
+
+def _pallas_block_call(body, ins):
+    """Run `body` (pytree-in → pytree-out) as ONE grid-free `pl.pallas_call`
+    with whole-array refs: every leaf is a full block, so the span's
+    intermediates stay VMEM-resident on TPU.  Interpret mode off-TPU traces
+    the identical computation (bit-identity with "xla" dispatch).  Scalar
+    leaves (the obs side-channel) ship as shape-(1,) refs."""
+    from . import ops as kops
+
+    flat, treedef = jax.tree_util.tree_flatten(ins)
+    out_sd = jax.eval_shape(body, ins)
+    oflat_sd, otree = jax.tree_util.tree_flatten(out_sd)
+    scal = [s.ndim == 0 for s in oflat_sd]
+    out_shape = [jax.ShapeDtypeStruct((1,) if sc else s.shape, s.dtype)
+                 for s, sc in zip(oflat_sd, scal)]
+
+    def flat_body(*leaves):
+        out = body(jax.tree_util.tree_unflatten(treedef, list(leaves)))
+        return jax.tree_util.tree_flatten(out)[0]
+
+    # pallas kernels may not close over traced constants (iota tables from
+    # arange, sort dispatch tables, ...): trace the body to a jaxpr once and
+    # ship its consts as explicit kernel inputs, re-binding them to the
+    # constvars at eval time.  0-d consts ride as shape-(1,) refs.
+    closed = jax.make_jaxpr(flat_body)(*flat)
+    consts = [jnp.asarray(c) for c in closed.consts]
+    cscal = [c.ndim == 0 for c in consts]
+    args = list(flat) + [c[None] if sc else c
+                         for c, sc in zip(consts, cscal)]
+
+    # outputs that folded to jaxpr literals (e.g. the constant -1 aux of an
+    # aux-free stage) never enter the kernel: a store of a concrete value
+    # would itself be a captured constant.  Reattach them host-side.
+    try:
+        from jax.extend.core import Literal
+    except ImportError:  # older jax
+        from jax.core import Literal
+    lit = [v.val if isinstance(v, Literal) else None
+           for v in closed.jaxpr.outvars]
+    keep = [i for i, v in enumerate(lit) if v is None]
+    out_shape = [out_shape[i] for i in keep]
+
+    def kernel(*refs):
+        in_refs = refs[:len(flat)]
+        const_refs = refs[len(flat):len(args)]
+        out_refs = refs[len(args):]
+        cvals = [r[...][0] if sc else r[...]
+                 for r, sc in zip(const_refs, cscal)]
+        oflat = jax.core.eval_jaxpr(closed.jaxpr, cvals,
+                                    *(r[...] for r in in_refs))
+        for r, i in zip(out_refs, keep):
+            r[...] = oflat[i][None] if scal[i] else oflat[i]
+
+    res = pl.pallas_call(kernel, out_shape=out_shape,
+                         interpret=kops._interpret())(*args)
+    merged = [None if v is None else jnp.asarray(v, oflat_sd[i].dtype)
+              for i, v in enumerate(lit)]
+    for r, i in zip(res, keep):
+        merged[i] = r[0] if scal[i] else r
+    return jax.tree_util.tree_unflatten(otree, merged)
+
+
+def run_span(span: Sequence, ins_per_stage: Sequence, planned_caps: Sequence,
+             use_kernels: bool, use_order: bool,
+             dispatch: Optional[str] = None):
+    """Execute a fused span (traceable).
+
+    `ins_per_stage[k]` lists stage k's resolved input batches with None
+    marking the in-span edge (the previous stage's output, substituted
+    internally); `planned_caps[k]` is stage k's planned compaction capacity
+    (`masked.planned_capacity`).  Interior boundaries compact inside the
+    span (pruned to live columns); the LAST stage's output returns RAW for
+    the caller's usual boundary compaction, keeping the solo/mega caps and
+    observation protocols aligned.
+
+    Returns `(raw_out, obs, caps)`: `obs` is the per-stage
+    `(pre-compaction valid count, kat aux)` list matching `run_stages`
+    (aux = int32 -1 for aux-free stages), `caps` the interior capacities
+    actually applied (static trace-time ints — the truncation-detection
+    reference for all but the last span stage)."""
+    mode = dispatch or dispatch_mode()
+    state: dict = {}
+
+    def body(ins):
+        acc: list = []
+        raw, counts, auxes = _span_body(span, ins, planned_caps, use_kernels,
+                                        use_order, acc)
+        state["caps"] = tuple(acc)
+        return raw, counts, auxes
+
+    if mode == "pallas":
+        raw, counts, auxes = _pallas_block_call(body, list(ins_per_stage))
+    else:
+        raw, counts, auxes = body(list(ins_per_stage))
+    return raw, list(zip(counts, auxes)), state["caps"]

@@ -277,19 +277,21 @@ def adversarial_hints(root, seed: int, factor: float = 100.0):
 
 def assert_adaptive_identical(root, make_bindings, seed: int,
                               n_stationary: int = 4, n_drifted: int = 6,
-                              drift: float = 0.7):
+                              drift: float = 0.7, **compile_kwargs):
     """Serve a drifting workload through an adaptive CompiledPlan and assert
     EVERY batch — across calibration swaps and truncation re-runs — is
     bit-identical (row multiset, no tolerance) to the eager reference on
     the same batch.  Aggressive thresholds force the feedback loop to act
-    within a short serve; returns the number of swaps performed."""
+    within a short serve; returns the number of swaps performed.  Extra
+    kwargs pass through to `compile_plan` (e.g. `use_megakernel`)."""
     from repro.core.pipeline import (AdaptiveConfig, ExecutableCache,
                                      compile_plan)
 
     cfg = AdaptiveConfig(check_every=2, patience=1, drift_high=0.6,
                          drift_low=0.3, min_drift_rows=0.0,
                          replan_max_plans=400)
-    cp = compile_plan(root, cache=ExecutableCache(), adaptive=cfg)
+    cp = compile_plan(root, cache=ExecutableCache(), adaptive=cfg,
+                      **compile_kwargs)
     for t in range(n_stationary + n_drifted):
         b = make_bindings(seed + 37 * t,
                           drift=0.0 if t < n_stationary else drift)
