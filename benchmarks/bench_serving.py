@@ -1,0 +1,250 @@
+"""Multi-tenant serving: coalesced engine throughput vs summed solo serving.
+
+The scenario (DESIGN.md §11): four tenants share one device — `q15`,
+`clickstream` and `textmining` stationary, plus a `q15`-shaped tenant whose
+filter-selectivity hint is ~25x off its data (the PR-5 drift workload).
+Requests arrive in open-loop bursts (every tenant submits a burst each
+round, regardless of completion — queue depth is load, not a closed loop),
+and the engine coalesces each plan group's backlog into shared device
+batches while 1-in-`probe_every` requests serve solo to feed per-tenant
+statistics.
+
+Mid-run the drifting tenant's probes arm its hysteresis and it swaps onto
+its calibrated regime — a deliberate cache miss for THAT tenant only.  The
+bench asserts the isolation contract: the swap happens, and the stationary
+tenants' executables are never retraced or evicted (cache trace/eviction
+counts are snapshotted around the timed window; the only new traces are the
+drifter's new regime).
+
+Measured:
+
+    engine_req_s   sustained requests/sec: the MEDIAN per-round serving
+                   rate over a window of a few hundred rounds.  The swap's
+                   background build (optimize + compile + pre-trace)
+                   briefly contends the GIL with the pump, so the rounds
+                   overlapping it run slower; the median reads the steady
+                   serving rate while `mean_req_s` and `p99_ms` keep the
+                   transient visible
+    mean_req_s     whole-window requests / wall (swap transient included)
+    p99_ms         99th-percentile request latency (submit -> deliver)
+    solo_req_s     per-tenant warm solo serving rate: bind_device ->
+                   run_device(donate) -> fetch, back-to-back on a dedicated
+                   CompiledPlan — the PR-4 serving loop a tenant would run
+                   if it had the device to itself
+    serve_vs_solo  engine_req_s / sum(solo_req_s) — the gated metric
+                   (`BENCH_MIN_SERVE_VS_SOLO`, default 0.9): batching many
+                   tenants onto one device must sustain >=90% of the
+                   throughput of giving every tenant its own device
+
+Every sampled response is checked multiset-equivalent to the eager
+single-request reference (atol covers float32 segment-sum reassociation;
+integer columns compare exactly): coalescing is a batching strategy, never
+a different answer.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import flows
+from repro.core import executor
+from repro.core.cost import StatsStore, calibrate_hints
+from repro.core.optimizer import optimize
+from repro.core.pipeline import ExecutableCache, compile_plan
+from repro.serve.dataflow import DataflowEngine, ServeConfig
+
+CHECK_PARITY = True
+N = 256                 # rows per request: serving-sized payloads, where the
+                        # per-dispatch overhead coalescing amortizes dominates
+                        # (constant across rounds: keeps bucket shapes warm)
+BURST = 64              # requests per tenant per round (= coalesce width)
+POOL = BURST * 8        # distinct binding sets cycled per tenant
+PARITY_CHECKS = 12      # requests per tenant compared to the eager reference
+
+
+def _calibrated(root, mk, batches: int = 6):
+    """Ship a stationary tenant with honest hints: observe a few offline
+    batches of its own workload and calibrate (the config flows declare
+    production-scale hints; a deployed tenant would serve the regime its
+    data calibrates to — only the `drift` tenant ships hints its data
+    contradicts)."""
+    store = StatsStore()
+    cp = compile_plan(optimize(root, include_commutes=False).best.plan,
+                      cache=ExecutableCache())
+    for s in range(batches):
+        staged = cp.bind_device(mk(N, 9000 + s))
+        _, counts, caps = cp.run_device_observed(staged, donate=True)
+        cp.fold_observation(store, counts, caps=caps)
+    return calibrate_hints(root, store, prior_weight=0.0, quant=4)
+
+
+def _tenants():
+    """(name, flow, make_bindings) per tenant; `drift` ships a ~25x
+    selectivity overestimate and serves data with the true 4% rate."""
+    q15_root, q15_b = flows.q15()
+    ck_root, ck_b = flows.clickstream()
+    tm_root, tm_b = flows.textmining()
+    dr_root, dr_b = flows.q15_drift(hint_selectivity=1.0)
+    raw = [
+        ("q15", q15_root, lambda n, s: q15_b(n, seed=s)),
+        ("click", ck_root, lambda n, s: ck_b(n, seed=s)),
+        ("text", tm_root, lambda n, s: tm_b(n, seed=s)),
+    ]
+    out = [(name, _calibrated(fl, mk), mk) for name, fl, mk in raw]
+    out.append(("drift", dr_root,
+                lambda n, s: dr_b(n, seed=s, true_sel=0.04)))
+    return out
+
+
+def _solo_rate(flow, reqs, min_time: float) -> float:
+    """Warm solo serving rate: the tenant's own optimized plan on its own
+    cache, bind -> run_device(donate) -> host fetch per request."""
+    cp = compile_plan(optimize(flow, include_commutes=False).best.plan,
+                      cache=ExecutableCache())
+    # cold trace of the exact serving entry (donate is part of the key)
+    cp.run_device(cp.bind_device(reqs[0]), donate=True).to_record_batch()
+    t0 = time.perf_counter()
+    served = 0
+    while True:
+        staged = cp.bind_device(reqs[served % len(reqs)])
+        cp.run_device(staged, donate=True).to_record_batch()
+        served += 1
+        dt = time.perf_counter() - t0
+        if dt >= min_time or served >= 400:
+            break
+    return served / dt
+
+
+def run(quick: bool = False) -> dict:
+    rounds = 120 if quick else 250
+    min_time = 0.3 if quick else 0.5
+    tenants = _tenants()
+
+    # bounded pool of distinct binding sets per tenant, cycled across the
+    # window (reusing host arrays is safe: donation consumes only the
+    # per-request device copies)
+    pool = {name: [mk(N, 1000 * ti + s) for s in range(POOL)]
+            for ti, (name, _, mk) in enumerate(tenants)}
+
+    per_tenant = BURST * rounds
+    js = sorted({(i * (per_tenant - 1)) // (PARITY_CHECKS - 1)
+                 for i in range(PARITY_CHECKS)})
+    js_set = frozenset(js)
+    refs = {}
+    if CHECK_PARITY:
+        pool_needed = sorted({j % POOL for j in js})
+        refs = {name: {p: executor.execute(fl, pool[name][p])
+                       for p in pool_needed}
+                for name, fl, _ in tenants}
+
+    # summed solo baseline: every tenant with the device to itself
+    solo = {name: _solo_rate(fl, pool[name][:8], min_time)
+            for name, fl, _ in tenants}
+
+    # probe_every = 2*BURST: each tenant solo-probes every other round.  The
+    # drifter's first probe (request 1) lands in warmup; with patience=3 the
+    # armed run completes and the swap is decided a few rounds in, so the
+    # window covers decision, background build, publish, and the post-swap
+    # steady state
+    eng = DataflowEngine(ServeConfig(max_coalesce=BURST,
+                                     probe_every=2 * BURST, patience=3))
+    for name, fl, _ in tenants:
+        eng.register(name, fl)
+
+    # warmup round: cold traces for every group (excluded from timing)
+    warm = [eng.submit(name, pool[name][k])
+            for name, _, _ in tenants for k in range(BURST)]
+    eng.drain()
+    assert all(r.error is None for r in warm)
+    traces_warm = eng.cache.stats().traces
+    coalesced_warm = eng.stats()["coalesced_requests"]
+
+    # timed open-loop window, clocked per round: the median round rate is
+    # the sustained serving rate (the handful of rounds overlapping the
+    # background build run slower); the mean and p99 keep that transient
+    # visible
+    sampled = {name: {} for name, _, _ in tenants}
+    lat = []
+    round_rate = []
+    t0 = time.perf_counter()
+    for rnd in range(rounds):
+        r0 = time.perf_counter()
+        batch = []
+        for name, _, _ in tenants:
+            for k in range(BURST):
+                j = rnd * BURST + k
+                batch.append((name, j, eng.submit(name, pool[name][j % POOL])))
+        eng.drain()
+        round_rate.append(len(batch) / (time.perf_counter() - r0))
+        for name, j, req in batch:
+            if req.error is not None:
+                raise req.error
+            lat.append(req.latency)
+            if j in js_set:
+                sampled[name][j] = req
+    wall = time.perf_counter() - t0
+
+    total = rounds * BURST * len(tenants)
+    engine_req_s = float(np.median(round_rate))
+    mean_req_s = total / wall
+    coalesced_window = eng.stats()["coalesced_requests"] - coalesced_warm
+
+    # the drift swap is prepared on a background thread (the pump never
+    # stalls); make sure it has published, then serve one epilogue round so
+    # the drifter demonstrably runs warm on its new regime
+    eng.join_swaps(timeout=120)
+    epilogue = [eng.submit(name, pool[name][k])
+                for name, _, _ in tenants for k in range(BURST)]
+    eng.drain()
+    assert all(r.error is None for r in epilogue)
+    cache = eng.cache.stats()
+
+    # isolation contract: the drifter swapped; nobody else did; the only
+    # post-warmup traces are the drifter's new regime (pre-traced in the
+    # background); nothing was evicted
+    assert eng.tenant_stats("drift")["swaps"] >= 1, \
+        "drift tenant never swapped regimes"
+    for name in ("q15", "click", "text"):
+        assert eng.tenant_stats(name)["swaps"] == 0, \
+            f"stationary tenant {name} swapped"
+    drift_traces = cache.traces - traces_warm
+    assert drift_traces <= 2, \
+        f"stationary tenants retraced: {drift_traces} new traces"
+    assert cache.evictions == 0, "serving evicted a warm executable"
+
+    if CHECK_PARITY:
+        for name, _, _ in tenants:
+            for j, req in sampled[name].items():
+                assert req.value.equivalent(refs[name][j % POOL], atol=1e-4), \
+                    f"{name} request {j} diverged from eager"
+
+    serve_vs_solo = engine_req_s / sum(solo.values())
+    es = eng.stats()
+    row = {
+        "flow": "mixed-tenants",
+        "tenants": len(tenants),
+        "rows": N,
+        "requests": total,
+        "engine_req_s": round(engine_req_s, 1),
+        "mean_req_s": round(mean_req_s, 1),
+        "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 2),
+        "solo_req_s": {k: round(v, 1) for k, v in solo.items()},
+        "serve_vs_solo": round(serve_vs_solo, 4),
+        "coalesced_frac": round(coalesced_window / total, 3),
+        "drift_swaps": eng.tenant_stats("drift")["swaps"],
+        "truncations": es["truncations"],
+    }
+    print(f"\n== serving ==\n{row}")
+    print(f"cache: {cache}")
+    return {
+        "name": "serving",
+        "rows": [row],
+        "serve_vs_solo": row["serve_vs_solo"],
+        "p99_ms": row["p99_ms"],
+    }
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -38,6 +38,7 @@ them without code changes:
     BENCH_MIN_PIPELINE_VS_EAGER    serving-vs-eager rate floor   (default 1.0)
     BENCH_MIN_ADAPTIVE_RECOVERY    post-swap/oracle rate floor   (default 0.8)
     BENCH_MIN_CROSSOVER_16K        16k-row serving/eager floor   (default 1.0)
+    BENCH_MIN_SERVE_VS_SOLO        engine/summed-solo rate floor (default 0.9)
 """
 
 from __future__ import annotations
@@ -65,6 +66,7 @@ GATES = {
     "pipeline": ("rows", "pipeline_bps", None),
     "aggregation": ("rows", "reduction_factor", None),
     "adaptive": ("rows", "post_bps", None),
+    "serving": ("rows", "engine_req_s", None),
 }
 
 
@@ -269,6 +271,31 @@ def check_adaptive_recovery(floor: float, errors: list[str]) -> None:
                   "swap observed")
 
 
+def check_serving_floor(floor: float, errors: list[str]) -> None:
+    """Acceptance bar (DESIGN.md §11): the multi-tenant engine must sustain
+    >= `floor` x the summed solo-flow serving throughput while the drifting
+    tenant swaps regimes (swap observed, nothing truncated), in BOTH the
+    committed baseline and the quick run."""
+    for quick in (False, True):
+        path = baseline_path("serving", quick=quick)
+        if not os.path.exists(path):
+            return  # already reported by check_bench
+        tag = "quick" if quick else "baseline"
+        doc = _load(path)
+        n_before = len(errors)
+        ratio = doc.get("serve_vs_solo")
+        if ratio is None or ratio < floor:
+            errors.append(f"serving[{tag}]: serve_vs_solo {ratio} below "
+                          f"floor {floor}")
+        for row in doc.get("rows", []):
+            if not row.get("drift_swaps"):
+                errors.append(f"serving[{tag}]/{row.get('flow')}: drift "
+                              "tenant never swapped regimes")
+        if len(errors) == n_before:
+            print(f"ok serving[{tag}]: serve_vs_solo {ratio} >= {floor}, "
+                  "drift swap observed")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--factor", type=float, default=float(
@@ -289,6 +316,9 @@ def main() -> None:
     ap.add_argument("--min-crossover-16k", type=float, default=float(
         os.environ.get("BENCH_MIN_CROSSOVER_16K", "1.0")),
         help="required serving-vs-eager ratio at the 16k batch size")
+    ap.add_argument("--min-serve-vs-solo", type=float, default=float(
+        os.environ.get("BENCH_MIN_SERVE_VS_SOLO", "0.9")),
+        help="required multi-tenant engine vs summed-solo throughput floor")
     args = ap.parse_args()
 
     errors: list[str] = []
@@ -299,6 +329,7 @@ def main() -> None:
     check_pipeline_vs_eager(args.min_pipeline_vs_eager, errors)
     check_adaptive_recovery(args.min_adaptive_recovery, errors)
     check_crossover_16k(args.min_crossover_16k, errors)
+    check_serving_floor(args.min_serve_vs_solo, errors)
 
     if errors:
         print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)

@@ -22,7 +22,7 @@ import time
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # benchmarks whose summaries are persisted as cross-PR baselines
-_BASELINED = ("enumeration", "pipeline", "aggregation", "adaptive")
+_BASELINED = ("enumeration", "pipeline", "aggregation", "adaptive", "serving")
 
 
 def baseline_path(name: str, quick: bool) -> str:
@@ -59,14 +59,15 @@ def main() -> None:
 
     from . import (bench_adaptive, bench_aggregation, bench_clickstream,
                    bench_enumeration, bench_pipeline, bench_q7, bench_q15,
-                   bench_roofline, bench_sca, bench_textmining)
+                   bench_roofline, bench_sca, bench_serving,
+                   bench_textmining)
 
     benches = {
         "q7": bench_q7, "q15": bench_q15, "textmining": bench_textmining,
         "clickstream": bench_clickstream, "sca": bench_sca,
         "enumeration": bench_enumeration, "pipeline": bench_pipeline,
         "aggregation": bench_aggregation, "adaptive": bench_adaptive,
-        "roofline": bench_roofline,
+        "serving": bench_serving, "roofline": bench_roofline,
     }
     if args.list:
         for name in benches:

@@ -68,6 +68,21 @@ def main():
     print("  pipeline   :", compiled.run(batch2).sorted_tuples())
     print("  cache      :", compiled.cache_stats())
 
+    # Many concurrent callers?  The multi-tenant engine wraps this same
+    # warm-executable loop with semantic-key routing, request coalescing and
+    # per-tenant drift isolation (DESIGN.md §11):
+    from repro.serve.dataflow import DataflowEngine
+
+    eng = DataflowEngine()
+    eng.register("tenant-a", plan)     # same key -> same plan group,
+    eng.register("tenant-b", plan)     # shared warm executable
+    reqs = [eng.submit(t, bindings) for t in ("tenant-a", "tenant-b")]
+    eng.drain()                        # or eng.start() for a pump thread
+    print("\n== multi-tenant serving (examples/serve_dataflow.py for more)")
+    for r in reqs:
+        print(f"  {r.tenant:9s}:", r.result().sorted_tuples())
+    print("  engine     :", eng.stats()["cache"])
+
 
 if __name__ == "__main__":
     main()

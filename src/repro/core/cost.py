@@ -286,6 +286,14 @@ class StatsStore:
         self._sources.clear()
         self._tick = 0
 
+    def clone(self) -> "StatsStore":
+        """Independent deep copy (same alpha, same observations).  Used to
+        seed a new tenant's store from an existing regime's pooled history
+        without aliasing the donors."""
+        s = StatsStore(alpha=self.alpha)
+        s.merge(self)
+        return s
+
     # -- cross-shard / cross-worker combination --------------------------
     def merge(self, other: "StatsStore") -> None:
         """Fold another store's observations in (sums add; EWMAs combine
@@ -324,6 +332,27 @@ class StatsStore:
         fold(self._stages, other._stages)
         fold(self._sources, other._sources)
         self._tick = max(self._tick, other._tick)
+
+
+def pool_stores(stores: Sequence[StatsStore],
+                alpha: float = 0.25) -> StatsStore:
+    """Batch-weighted pool of per-tenant `StatsStore`s — the multi-tenant
+    serving engine's merge policy (DESIGN.md §11).
+
+    Each tenant observes only its OWN requests (solo probes), so per-tenant
+    stores stay uncontaminated and one tenant's drift can never shift
+    another tenant's posterior.  The pool is read in exactly one place:
+    repairing a SHARED coalesced plan whose capacities all co-batched
+    tenants overran together — there the right statistics are the mixture
+    the shared batch actually carries, which is the batch-weighted merge
+    (`StatsStore.merge`) of the members' individual histories.  Drift
+    scoring and per-tenant calibration must keep reading the individual
+    stores; pooling them would let a heavy drifting tenant drag every
+    co-tenant's regime with it (the thrash §11 is designed out of)."""
+    pooled = StatsStore(alpha=alpha)
+    for s in stores:
+        pooled.merge(s)
+    return pooled
 
 
 def _quantize_log2(x: float, quant: int) -> float:

@@ -71,6 +71,12 @@ observed statistics durably leave the hints' regime.  Calibrated hints are
 part of `semantic_key`, so a swap is a deliberate cache miss into a
 coexisting regime entry, and a batch that overran a planned compaction
 capacity is re-executed under the repaired plan before it is returned.
+
+Multi-tenant serving (DESIGN.md §11): `serve.dataflow.DataflowEngine`
+builds on this module's primitives — `semantic_key` routes tenants into
+plan groups, `bind_device`/`run_device_observed` serve coalesced batches
+with donated inputs, and one shared `ExecutableCache` keeps every
+regime's executables warm across tenants.
 """
 
 from __future__ import annotations
@@ -79,6 +85,7 @@ import collections
 import dataclasses
 import hashlib
 import os
+import threading
 import warnings
 from typing import Mapping, Optional, Sequence
 
@@ -182,7 +189,23 @@ def _hints_fingerprint(h, pk_sem) -> tuple:
 
 
 def semantic_key(node: Node, _memo: Optional[dict] = None) -> tuple:
-    """Commute-invariant, identity-free fingerprint of a flow's semantics."""
+    """Commute-invariant, identity-free fingerprint of a flow's semantics.
+
+    Two flows share a key iff they compute the same result by construction:
+    operator names, UDF code fingerprinted by VALUE (bytecode, closures,
+    referenced globals — a rebuilt identical flow hits, a same-named
+    different UDF never collides), reduce/join keys, source schemas,
+    cardinalities and declared sort orders, with binary-operator sides
+    sorted so join argument order never splits the key.  HINTS are part of
+    the fingerprint — deliberately: calibrated posterior hints define a
+    plan's statistics regime, so an adaptive swap (DESIGN.md §9) or a
+    drifted tenant's recalibration (§11) lands in a coexisting cache entry
+    instead of clobbering the old regime, and drifting back re-hits warm.
+
+    This is the executable-cache identity (with physical details appended —
+    see `ExecutableCache`) and the multi-tenant engine's routing key:
+    tenants whose flows agree on it queue into one plan group and share its
+    warm executables (`serve.dataflow`)."""
     if _memo is None:
         _memo = {}
     hit = _memo.get(id(node))
@@ -666,6 +689,16 @@ def record_batch_obs(store: StatsStore, stages: Sequence[Stage],
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class CacheStats:
+    """Cumulative `ExecutableCache` counters (`cache.stats()` snapshot).
+
+    `hits`/`misses` count key lookups; `traces` counts actual jit traces,
+    incremented from inside the traced body — a miss that reuses jax's own
+    compilation cache still shows the trace it cost.  `size` is the current
+    entry count, `evictions` the LRU drops (an evicted-then-needed entry
+    returns as a fresh miss + trace).  Serving invariants are asserted on
+    deltas of these: a warm loop adds hits only, and a tenant's regime swap
+    adds at most its own new traces (tests/test_serve_dataflow.py)."""
+
     hits: int
     misses: int
     traces: int
@@ -695,9 +728,13 @@ class ExecutableCache:
 
     Key: `(semantic_key(flow), stage order signature, per-source (name,
     schema signature, capacity bucket, runtime order), use_kernels,
-    compact_slack, use_order, donate, observe)`.  `traces` counts actual
-    jit traces (incremented from inside the traced body), so tests can
-    assert warm calls never re-trace.
+    compact_slack, use_order, donate, observe, megakernel routes,
+    dispatch mode)`.  The routes element records which stages execute as
+    whole-stage megakernels (DESIGN.md §10) and the dispatch mode names the
+    backend variant, so toggling `REPRO_MEGAKERNEL`/`REPRO_MEGAKERNEL_PALLAS`
+    coexists with the plain route instead of clobbering it.  `traces`
+    counts actual jit traces (incremented from inside the traced body), so
+    tests can assert warm calls never re-trace.
 
     Capacity defaults to `$REPRO_EXEC_CACHE_CAP` (256): adaptive serving
     deliberately multiplies executables (one per calibration regime), so
@@ -706,47 +743,59 @@ class ExecutableCache:
     `evictions`; the cumulative hit/miss/trace counters are NOT rewound —
     an evicted-then-recompiled entry shows up as a fresh miss + trace,
     which is exactly what it costs.
+
+    Thread-safe: the multi-tenant serving engine (DESIGN.md §11) prepares
+    regime swaps on a background thread while the pump thread serves from
+    the same cache, so all map access is mutex-guarded.  Two threads
+    missing on the same key may both build the executable — one insert
+    wins, the duplicate trace is wasted work, never corruption.
     """
 
     def __init__(self, maxsize: Optional[int] = None):
         self.maxsize = maxsize if maxsize is not None else _default_cache_cap()
         self._data: collections.OrderedDict = collections.OrderedDict()
+        self._mu = threading.Lock()
         self.hits = 0
         self.misses = 0
         self.traces = 0
         self.evictions = 0
 
     def get(self, key):
-        fn = self._data.get(key)
-        if fn is None:
-            self.misses += 1
-            return None
-        self._data.move_to_end(key)
-        self.hits += 1
-        return fn
+        with self._mu:
+            fn = self._data.get(key)
+            if fn is None:
+                self.misses += 1
+                return None
+            self._data.move_to_end(key)
+            self.hits += 1
+            return fn
 
     def put(self, key, fn) -> None:
-        self._data[key] = fn
-        self._data.move_to_end(key)
-        while len(self._data) > self.maxsize:
-            self._data.popitem(last=False)
-            self.evictions += 1
+        with self._mu:
+            self._data[key] = fn
+            self._data.move_to_end(key)
+            while len(self._data) > self.maxsize:
+                self._data.popitem(last=False)
+                self.evictions += 1
 
     def resize(self, maxsize: int) -> None:
         """Shrink/grow the bound, evicting LRU entries as needed."""
-        self.maxsize = max(int(maxsize), 1)
-        while len(self._data) > self.maxsize:
-            self._data.popitem(last=False)
-            self.evictions += 1
+        with self._mu:
+            self.maxsize = max(int(maxsize), 1)
+            while len(self._data) > self.maxsize:
+                self._data.popitem(last=False)
+                self.evictions += 1
 
     def stats(self) -> CacheStats:
-        return CacheStats(hits=self.hits, misses=self.misses,
-                          traces=self.traces, size=len(self._data),
-                          evictions=self.evictions)
+        with self._mu:
+            return CacheStats(hits=self.hits, misses=self.misses,
+                              traces=self.traces, size=len(self._data),
+                              evictions=self.evictions)
 
     def clear(self) -> None:
-        self._data.clear()
-        self.hits = self.misses = self.traces = self.evictions = 0
+        with self._mu:
+            self._data.clear()
+            self.hits = self.misses = self.traces = self.evictions = 0
 
 
 _CACHE = ExecutableCache()
@@ -908,8 +957,11 @@ class CompiledPlan:
 
     def bind_device(self, bindings: Mapping[str, RecordBatch]
                     ) -> dict[str, M.MaskedBatch]:
-        """Host batches -> device-resident masked batches (order attached
-        from `Source.sorted_on`), ready for `run_device`."""
+        """Host batches -> device-resident masked batches, ready for
+        `run_device`: each source is padded to its geometric
+        `bucket_capacity` (so repeat sizes reuse traced shapes), masked to
+        its valid rows, and carries the order prefix `Source.sorted_on`
+        declares (which the lowered stages' sort elision relies on)."""
         return self._bind(bindings)[0]
 
     def _masked_sig(self, masked: Mapping[str, M.MaskedBatch]):
@@ -944,8 +996,10 @@ class CompiledPlan:
             self._routes_memo[key] = hit
         return hit
 
-    def _executable(self, source_sig: tuple, donate: bool = False):
-        observe = self.adaptive is not None
+    def _executable(self, source_sig: tuple, donate: bool = False,
+                    observe: Optional[bool] = None):
+        if observe is None:
+            observe = self.adaptive is not None
         routes = self._routes({s[0]: s[2] for s in source_sig})
         mode = None
         if routes is not None:
@@ -1027,19 +1081,33 @@ class CompiledPlan:
             self.cache.put(key, fn)
         return fn
 
+    # -- observation plumbing (DESIGN.md §9/§11) -----------------------------
+    def fold_observation(self, store: StatsStore, counts,
+                         caps: Optional[Sequence[int]] = None
+                         ) -> Optional[int]:
+        """Fold one packed observation vector (as returned by
+        `run_device_observed`) into `store`, resolving the `[sources
+        (name-sorted), per-stage out counts, per-stage aux]` layout against
+        this handle's current stage list.  With `caps` given (the matching
+        `stage_caps`), returns the index of the first stage whose observed
+        pre-compaction rows overran its planned capacity — the batch just
+        executed is silently missing rows past that stage — or None when
+        nothing truncated.  No policy runs here: the caller owns the store,
+        any drift decision and any truncation repair."""
+        counts = np.asarray(counts)
+        names = sorted(self._sources)
+        ns, nst = len(names), len(self.stages)
+        return record_batch_obs(store, self.stages,
+                                dict(zip(names, counts[:ns])),
+                                counts[ns:ns + nst],
+                                counts[ns + nst:ns + 2 * nst], caps=caps)
+
     # -- adaptive feedback (DESIGN.md §9) ------------------------------------
     def _observe(self, fn, obs) -> bool:
         """Fold one batch's packed observation vector into `stats`; returns
         True when a stage truncated — in which case the plan has already
         been force-swapped and the caller must re-execute the batch."""
-        counts = np.asarray(obs)  # one small transfer (the feedback sync)
-        names = sorted(self._sources)
-        ns, nst = len(names), len(self.stages)
-        src = dict(zip(names, counts[:ns]))
-        trunc = record_batch_obs(self.stats, self.stages, src,
-                                 counts[ns:ns + nst],
-                                 counts[ns + nst:ns + 2 * nst],
-                                 caps=fn._stage_caps)
+        trunc = self.fold_observation(self.stats, obs, caps=fn._stage_caps)
         if trunc is None:
             return False
         # the planned capacity was overrun: the batch just produced is
@@ -1165,6 +1233,27 @@ class CompiledPlan:
                              "serving: truncation re-runs reuse the inputs")
         return self._serve_adaptive(
             lambda: self._masked_sig(masked_bindings), donate=False)
+
+    def run_device_observed(self, masked_bindings: Mapping[str, M.MaskedBatch],
+                            donate: bool = False):
+        """Device-resident step that also returns the batch's observations:
+        `(out, counts, stage_caps)` where `counts` is the packed int32
+        vector of per-source valid rows, per-stage pre-compaction rows and
+        per-stage KAT/Match aux counts, and `stage_caps` the planned
+        (trace-time static) compaction capacities — feed both to
+        `fold_observation` for recording and truncation detection.
+
+        Unlike `adaptive` serving, NO policy runs: the caller owns the
+        `StatsStore`, the drift decision and any truncation repair, so
+        `donate=True` is allowed — a caller that donates must re-materialize
+        its inputs itself if it decides to re-execute.  This is the hook the
+        multi-tenant dataflow engine (`serve.dataflow`, DESIGN.md §11)
+        builds its per-tenant feedback on.  Reading the counts synchronizes
+        with the device — the per-batch price of observation."""
+        masked, sig = self._masked_sig(masked_bindings)
+        fn = self._executable(sig, donate=donate, observe=True)
+        out, obs = fn(masked)
+        return out, np.asarray(obs), tuple(fn._stage_caps)
 
     def run_masked(self, masked_bindings: Mapping[str, M.MaskedBatch]
                    ) -> M.MaskedBatch:

@@ -12,7 +12,7 @@ _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 EXPECTED_BENCHES = {"q7", "q15", "textmining", "clickstream", "sca",
                     "enumeration", "pipeline", "aggregation", "adaptive",
-                    "roofline"}
+                    "serving", "roofline"}
 
 
 def _run_cli(*args, timeout=180):

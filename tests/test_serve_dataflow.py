@@ -1,0 +1,242 @@
+"""Multi-tenant serving engine (DESIGN.md §11): coalescing-transform
+soundness, mux/demux roundtrip parity, semantic-key routing, per-tenant
+drift isolation (one tenant's adversarial drift must never retrace or evict
+a co-tenant's executables), solo fallback for non-coalescable flows, and
+truncation repair — with every served response matching eager
+single-request execution row-for-row (keys exact; float aggregates to
+1e-9, since a shared device batch may reassociate a group's sum)."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import flows
+from repro.core import executor
+from repro.core import flow as F
+from repro.core.cost import StatsStore, pool_stores
+from repro.core.record import Schema, batch_from_dict
+from repro.serve.dataflow import (DataflowEngine, ServeConfig, coalesce_flow,
+                                  coalesce_bindings, split_result)
+
+from flowgen import canonical_rows
+
+N = 512  # rows per request
+
+
+def _cfg(**over):
+    """Deterministic single-threaded engine config for tests: synchronous
+    swaps, frequent probes, hair-trigger hysteresis."""
+    base = dict(max_coalesce=4, probe_every=4, patience=2,
+                min_drift_rows=8.0, async_swap=False)
+    base.update(over)
+    return ServeConfig(**base)
+
+
+def _rows_match(got, ref) -> bool:
+    """Row multisets equal: exact for ints/keys, 1e-9-relative for floats
+    (a coalesced device segment-sum may accumulate a group in a different
+    order than numpy's pairwise per-request sum)."""
+    if len(got) != len(ref):
+        return False
+    for g, r in zip(got, ref):
+        for a, b in zip(g, r):
+            if isinstance(a, float) or isinstance(b, float):
+                if not math.isclose(a, b, rel_tol=1e-9, abs_tol=1e-9):
+                    return False
+            elif a != b:
+                return False
+    return True
+
+
+def _assert_parity(reqs, root):
+    for r in reqs:
+        assert r.error is None, r.error
+        assert _rows_match(canonical_rows(r.value), canonical_rows(
+            executor.execute(root, r.bindings))), \
+            f"served result for {r.tenant!r} diverged from eager"
+
+
+# ---------------------------------------------------------------------------
+# The coalescing transform
+# ---------------------------------------------------------------------------
+def test_coalesce_flow_structure():
+    root, _ = flows.q15()
+    cf = coalesce_flow(root, 4)
+    assert cf is not None and cf.width == 4
+    # every source carries its own tag column (binary schema unions reject a
+    # shared name) and the output keeps exactly one canonical request tag
+    assert len(set(cf.source_tags.values())) == len(cf.source_tags)
+    assert cf.out_tag in cf.root.out_schema
+    for tag in cf.tags:
+        assert tag.startswith("__req")
+    # sources are scaled to hold `width` concatenated requests
+    originals = {s.name: s for s in F.sources_of(root)}
+    for s in F.sources_of(cf.root):
+        assert s.num_records == originals[s.name].num_records * 4
+        assert s.sorted_on[0] == cf.source_tags[s.name]
+
+
+def test_coalesce_flow_rejects_cross_and_tag_collisions():
+    sa = F.source("a", Schema(("k", "v"), {"k": np.dtype(np.int64),
+                                           "v": np.dtype(np.float32)}))
+    sb = F.source("b", Schema(("j", "w"), {"j": np.dtype(np.int64),
+                                           "w": np.dtype(np.float32)}))
+    assert coalesce_flow(F.cross(sa, sb), 4) is None
+    clash = F.source("c", Schema(("__req", "v"),
+                                 {"__req": np.dtype(np.int64),
+                                  "v": np.dtype(np.float32)}))
+    assert coalesce_flow(clash, 4) is None
+
+
+def test_coalesce_roundtrip_is_bit_identical_to_solo_eager():
+    """mux -> eager-execute the coalesced flow -> demux == per-request eager."""
+    root, mkb = flows.q15()
+    reqs = [mkb(N, seed=s) for s in range(3)]
+    cf = coalesce_flow(root, 3)
+    combined = coalesce_bindings(reqs, cf)
+    parts = split_result(executor.execute(cf.root, combined), 3, cf)
+    for part, b in zip(parts, reqs):
+        ref = executor.execute(root, b)
+        assert set(part.fields) == set(ref.fields)  # tags stripped
+        assert canonical_rows(part) == canonical_rows(ref)
+
+
+# ---------------------------------------------------------------------------
+# Routing and the serve paths
+# ---------------------------------------------------------------------------
+def test_same_flow_tenants_share_one_plan_group():
+    eng = DataflowEngine(_cfg())
+    ra, mka = flows.q15()
+    rb, mkb = flows.q15()  # built independently: equal semantic key
+    eng.register("a", ra)
+    eng.register("b", rb)
+    reqs = [eng.submit(t, mk(N, seed=10 * i + ti))
+            for i in range(3)
+            for ti, (t, mk) in enumerate((("a", mka), ("b", mkb)))]
+    eng.drain()
+    assert eng.stats()["groups"] == 1
+    assert eng.tenant_stats("a")["group_size"] == 2
+    assert eng.coalesced_requests > 0 and eng.solo_requests > 0
+    _assert_parity(reqs, ra)
+
+
+def test_non_coalescable_flow_serves_solo():
+    sa = F.source("a", Schema(("k", "v"), {"k": np.dtype(np.int64),
+                                           "v": np.dtype(np.float32)}))
+    sb = F.source("b", Schema(("j", "w"), {"j": np.dtype(np.int64),
+                                           "w": np.dtype(np.float32)}))
+    root = F.cross(sa, sb)
+
+    def mk(seed):
+        rng = np.random.default_rng(seed)
+        return {"a": batch_from_dict({
+                    "k": rng.integers(0, 8, 16).astype(np.int64),
+                    "v": rng.random(16).astype(np.float32)}),
+                "b": batch_from_dict({
+                    "j": rng.integers(0, 8, 8).astype(np.int64),
+                    "w": rng.random(8).astype(np.float32)})}
+
+    eng = DataflowEngine(_cfg())
+    eng.register("t", root)
+    reqs = [eng.submit("t", mk(s)) for s in range(4)]
+    eng.drain()
+    assert eng.coalesced_requests == 0 and eng.solo_requests == 4
+    _assert_parity(reqs, root)
+
+
+def test_request_result_timeout():
+    eng = DataflowEngine(_cfg())
+    root, mkb = flows.q15()
+    eng.register("t", root)
+    req = eng.submit("t", mkb(N, seed=0))
+    with pytest.raises(TimeoutError):
+        req.result(timeout=0.01)  # nobody pumped
+    eng.drain()
+    assert req.done and req.latency > 0
+
+
+# ---------------------------------------------------------------------------
+# Tenant isolation under adversarial drift
+# ---------------------------------------------------------------------------
+def test_drifting_tenant_swaps_without_touching_co_tenant():
+    """Tenants A and B register the SAME flow (one plan group, shared warm
+    executables).  A's data contradicts the declared selectivity hint ~25x
+    (the adversarial drift workload); B's data matches it.  A must swap onto
+    its own calibrated regime; B must keep its group, executables and zero
+    swaps — and after A's swap settles, continued mixed serving must add
+    ZERO new traces and evict nothing."""
+    root, mkb = flows.q15_drift(hint_selectivity=1.0)
+    eng = DataflowEngine(_cfg())
+    eng.register("a", root)
+    eng.register("b", root)
+
+    def round_(i):
+        reqs = [eng.submit("a", mkb(N, seed=100 + 17 * i + k, true_sel=0.04))
+                for k in range(4)]
+        reqs += [eng.submit("b", mkb(N, seed=900 + 17 * i + k, true_sel=1.0))
+                 for k in range(4)]
+        eng.drain()
+        return reqs
+
+    served = []
+    # rounds 0-5: warmup, A's probes arm its hysteresis, it swaps, and its
+    # posterior settles (the first calibration sees few samples, so A may
+    # legitimately refine through more than one regime while converging)
+    for i in range(6):
+        served += round_(i)
+    assert eng.tenant_stats("a")["swaps"] >= 1, "drifting tenant never swapped"
+    snap = eng.cache.stats().traces
+    # rounds 6-12: steady mixed serving across the now-separate regimes
+    for i in range(6, 13):
+        served += round_(i)
+    cache = eng.cache.stats()
+    assert eng.tenant_stats("b")["swaps"] == 0, "stationary tenant swapped"
+    assert eng.tenant_stats("a")["group_size"] == 1
+    assert eng.tenant_stats("b")["group_size"] == 1
+    assert eng.stats()["groups"] >= 2
+    assert cache.traces == snap, \
+        f"steady mixed serving retraced: {cache.traces - snap} new traces"
+    assert cache.evictions == 0, "a warm executable was evicted"
+    _assert_parity(served, root)
+
+
+def test_truncation_falls_back_and_repairs():
+    """A hint that UNDERestimates output 50x overruns planned capacities:
+    the coalesced batch is discarded (it is missing rows), its requests
+    re-serve solo, and the solo overrun force-recalibrates the tenant —
+    every delivered result still bit-identical to eager."""
+    root, mkb = flows.q15_drift(hint_selectivity=0.02)
+    eng = DataflowEngine(_cfg())
+    eng.register("t", root)
+    served = []
+    for i in range(3):
+        served += [eng.submit("t", mkb(N, seed=31 * i + k, true_sel=1.0))
+                   for k in range(4)]
+        eng.drain()
+    assert eng.truncations >= 1
+    assert eng.tenant_stats("t")["swaps"] >= 1  # forced recalibration moved it
+    _assert_parity(served, root)
+
+
+# ---------------------------------------------------------------------------
+# Per-tenant store policy
+# ---------------------------------------------------------------------------
+def test_pool_stores_batch_weighted_and_clone_independent():
+    a, b = StatsStore(alpha=0.5), StatsStore(alpha=0.5)
+    for _ in range(3):
+        a.tick()
+        a.observe_stage(("F",), (100.0,), 10.0)
+    b.tick()
+    b.observe_stage(("F",), (100.0,), 90.0)
+    pooled = pool_stores([a, b])
+    o = pooled.stage(("F",))
+    assert o.batches == 4
+    # EWMA combines weighted by batches: 3/4 of A's 10 + 1/4 of B's 90
+    assert o.ewma_out == pytest.approx(0.75 * 10.0 + 0.25 * 90.0)
+    # pooling never aliases the donors
+    c = a.clone()
+    c.tick()
+    c.observe_stage(("F",), (100.0,), 500.0)
+    assert a.stage(("F",)).batches == 3
+    assert pooled.stage(("F",)).rows_out == pytest.approx(120.0)
