@@ -39,6 +39,15 @@ them without code changes:
     BENCH_MIN_ADAPTIVE_RECOVERY    post-swap/oracle rate floor   (default 0.8)
     BENCH_MIN_CROSSOVER_16K        16k-row serving/eager floor   (default 1.0)
     BENCH_MIN_SERVE_VS_SOLO        engine/summed-solo rate floor (default 0.9)
+    BENCH_MIN_WEAK_SCALING         8-shard weak-scaling floor    (default 0.6)
+
+Weak-scaling bar (DESIGN.md §12): BOTH distributed artifacts must show
+`weak_scaling_efficiency` (overlap wire, full mesh width) >= the floor,
+nonzero overlap fraction and a dispatch reduction > 1 (the sliced schedule
+actually replaced the per-column collectives); the COMMITTED baseline must
+additionally beat the serial wire strictly — the quick run, a single CI
+sample, only has to stay within 0.85x of serial so host noise cannot flake
+the gate while a real inversion still fails it.
 """
 
 from __future__ import annotations
@@ -67,6 +76,8 @@ GATES = {
     "aggregation": ("rows", "reduction_factor", None),
     "adaptive": ("rows", "post_bps", None),
     "serving": ("rows", "engine_req_s", None),
+    "distributed": ("rows", "mesh_bps",
+                    frozenset(("shards-1", "shards-8"))),
 }
 
 
@@ -296,6 +307,48 @@ def check_serving_floor(floor: float, errors: list[str]) -> None:
                   "drift swap observed")
 
 
+def check_weak_scaling(floor: float, errors: list[str]) -> None:
+    """Acceptance bar (DESIGN.md §12): at the full mesh width the sliced
+    overlap wire must retain >= `floor` of perfect weak scaling and its
+    schedule must be strictly tighter than the serial per-column wire
+    (fewer dispatches, nonzero overlap fraction) in BOTH artifacts; the
+    committed baseline must also be strictly FASTER than serial, while the
+    quick run tolerates 0.85x for single-sample host noise."""
+    for quick in (False, True):
+        path = baseline_path("distributed", quick=quick)
+        if not os.path.exists(path):
+            return  # already reported by check_bench
+        tag = "quick" if quick else "baseline"
+        doc = _load(path)
+        n_before = len(errors)
+        eff = doc.get("weak_scaling_efficiency")
+        ser = doc.get("weak_scaling_efficiency_serial")
+        if eff is None or ser is None:
+            errors.append(f"distributed[{tag}]: missing weak-scaling "
+                          "efficiency metric(s)")
+            continue
+        if eff < floor:
+            errors.append(f"distributed[{tag}]: weak-scaling efficiency "
+                          f"{eff} below floor {floor}")
+        serial_floor = ser if not quick else ser * 0.85
+        if eff <= serial_floor:
+            errors.append(
+                f"distributed[{tag}]: overlap efficiency {eff} does not "
+                f"beat serial {ser}" + ("" if not quick else " x 0.85"))
+        if not doc.get("overlap_fraction"):
+            errors.append(f"distributed[{tag}]: overlap fraction is zero — "
+                          "the sliced schedule never ran")
+        if doc.get("dispatch_reduction", 0) <= 1.0:
+            errors.append(f"distributed[{tag}]: dispatch reduction "
+                          f"{doc.get('dispatch_reduction')} <= 1 — sliced "
+                          "wire issued no fewer collectives than serial")
+        if not doc.get("bit_identical"):
+            errors.append(f"distributed[{tag}]: bit_identical flag not set")
+        if len(errors) == n_before:
+            print(f"ok distributed[{tag}]: weak scaling {eff} >= {floor} "
+                  f"(serial {ser}), overlap schedule strictly tighter")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--factor", type=float, default=float(
@@ -319,6 +372,9 @@ def main() -> None:
     ap.add_argument("--min-serve-vs-solo", type=float, default=float(
         os.environ.get("BENCH_MIN_SERVE_VS_SOLO", "0.9")),
         help="required multi-tenant engine vs summed-solo throughput floor")
+    ap.add_argument("--min-weak-scaling", type=float, default=float(
+        os.environ.get("BENCH_MIN_WEAK_SCALING", "0.6")),
+        help="required 8-shard weak-scaling efficiency with overlap on")
     args = ap.parse_args()
 
     errors: list[str] = []
@@ -330,6 +386,7 @@ def main() -> None:
     check_adaptive_recovery(args.min_adaptive_recovery, errors)
     check_crossover_16k(args.min_crossover_16k, errors)
     check_serving_floor(args.min_serve_vs_solo, errors)
+    check_weak_scaling(args.min_weak_scaling, errors)
 
     if errors:
         print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)

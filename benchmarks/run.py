@@ -22,7 +22,8 @@ import time
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # benchmarks whose summaries are persisted as cross-PR baselines
-_BASELINED = ("enumeration", "pipeline", "aggregation", "adaptive", "serving")
+_BASELINED = ("enumeration", "pipeline", "aggregation", "adaptive", "serving",
+              "distributed")
 
 
 def baseline_path(name: str, quick: bool) -> str:
@@ -58,9 +59,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_adaptive, bench_aggregation, bench_clickstream,
-                   bench_enumeration, bench_pipeline, bench_q7, bench_q15,
-                   bench_roofline, bench_sca, bench_serving,
-                   bench_textmining)
+                   bench_distributed, bench_enumeration, bench_pipeline,
+                   bench_q7, bench_q15, bench_roofline, bench_sca,
+                   bench_serving, bench_textmining)
 
     benches = {
         "q7": bench_q7, "q15": bench_q15, "textmining": bench_textmining,
@@ -68,6 +69,7 @@ def main() -> None:
         "enumeration": bench_enumeration, "pipeline": bench_pipeline,
         "aggregation": bench_aggregation, "adaptive": bench_adaptive,
         "serving": bench_serving, "roofline": bench_roofline,
+        "distributed": bench_distributed,
     }
     if args.list:
         for name in benches:

@@ -583,3 +583,38 @@ def calibrate_hints(root: Node, store: StatsStore, prior_weight: float = 4.0,
         return out
 
     return rebuild(root)
+
+
+def wire_profile(plan, dop: int = 1,
+                 stats_memo: Optional[dict] = None) -> list[dict]:
+    """Predicted collective traffic of a physical plan, one entry per
+    non-forward shipped edge: the §7.1-estimated global rows/bytes that the
+    comms cost model priced against `hw` link bandwidth.
+
+    Duck-typed over `physical.PhysPlan` (`.node` / `.inputs` / `.ship`) to
+    keep this module physical-agnostic.  `bytes` is valid-row traffic; the
+    runtime ships fixed-capacity buffers (capacity x workers slots), so
+    observed `distributed.shuffle_stats().wire_bytes` exceeds the model by
+    the slack/bucketing factor — the bench reports both sides of that ratio
+    (benchmarks/bench_distributed.py)."""
+    if stats_memo is None:
+        stats_memo = {}
+    edges: list[dict] = []
+    seen: set[int] = set()
+
+    def visit(p) -> None:
+        if id(p) in seen:
+            return
+        seen.add(id(p))
+        for ip, how in zip(p.inputs, p.ship or ()):
+            visit(ip)
+            if how == "forward":
+                continue
+            st = estimate(ip.node, stats_memo, dop)
+            scale = float(dop) if how == "broadcast" else 1.0
+            edges.append({"op": p.node.name, "input": ip.node.name,
+                          "ship": how, "rows": st.rows,
+                          "bytes": st.bytes * scale})
+
+    visit(plan)
+    return edges

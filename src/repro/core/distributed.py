@@ -1,31 +1,51 @@
 """Distributed flow execution under shard_map (the Nephele-engine analogue).
 
-A physical plan (repro.core.physical.PhysPlan) is executed data-parallel over
-the mesh `data` axis.  The paper's shipping strategies map onto collectives:
+A physical plan (`repro.core.physical.PhysPlan`) runs data-parallel over the
+mesh `data` axis.  The per-shard body executes the SAME fused stages as the
+local compiled pipeline — Map chains fuse, megakernel spans keep interior
+boundaries VMEM-resident (DESIGN.md §10), combiner halves of a split Reduce
+pre-aggregate per shard BEFORE any collective fires, and the adaptive
+side-channel psums every stage's boundary counts over the mesh so one global
+observation per batch feeds the §9 feedback loop.  The paper's shipping
+strategies map onto collectives:
 
-    partition  -> hash repartition via jax.lax.all_to_all
+    partition  -> hash repartition via jax.lax.all_to_all, on the partition
+                  columns the optimizer chose (`PhysPlan.ship_keys` — a
+                  multi-column Reduce may hash a key SUBSET for a more
+                  reusable co-location class)
     broadcast  -> replicate via jax.lax.all_gather(tiled)
-    forward    -> no communication
+    forward    -> no communication (the plan proved co-location)
 
-Local strategies are the masked (static-shape) operators of
-`repro.core.masked` run per shard.  Capacity management: a repartition
-temporarily expands the per-worker buffer to p x local capacity (every worker
-reserves one slot block per peer) and compacts back using the optimizer's
-cardinality estimate — the masked-batch analogue of Nephele's spill buffers.
+Micro-batched collective/compute overlap (DESIGN.md §12): each collective's
+payload is bit-packed into one byte matrix and shipped in K independent
+slices (`REPRO_OVERLAP_SLICES`, kill switch `REPRO_OVERLAP=0`), so the
+transfer of slice i can overlap whatever else the scheduler has in flight —
+the slices carry disjoint buffer ranges and reassemble to EXACTLY the serial
+receive layout, so sliced execution is bit-identical to the unpipelined
+path (pure data movement, no arithmetic reassociation).
 
-The same hash is used host-side (numpy) to honor `Source.partitioned_on`,
-so plans whose costing assumed pre-partitioned sources execute correctly.
+Capacity management: a repartition temporarily expands the per-worker buffer
+to p x local capacity (every worker reserves one slot block per peer) and
+compacts back using the optimizer's cardinality estimate — the masked-batch
+analogue of Nephele's spill buffers.  The same hash is used host-side
+(numpy) to honor `Source.partitioned_on`, so plans whose costing assumed
+pre-partitioned sources execute correctly.
+
+Entry points: `execute_distributed` (one-shot, retraces per call) and
+`DistributedPlan` (cached + jitted serving handle whose executable identity
+includes the layout — ship strategies, partition columns, dop, slicing).
 """
 
 from __future__ import annotations
 
 import functools
+import os
 from typing import Mapping, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 # newer jax exposes shard_map as jax.shard_map; older versions keep it in
 # jax.experimental.  The replication-check kwarg was renamed check_rep ->
@@ -45,38 +65,97 @@ except (ValueError, TypeError):  # pragma: no cover - unintrospectable
 
 from . import masked as M
 from .operators import CoGroupOp, MatchOp, Node, ReduceOp, Source
-from .physical import PhysPlan
+from .physical import MESH_SHARDS_ENV, PhysPlan, default_mesh_shards
 from .record import RecordBatch
 
 _MIX = 0x9E3779B97F4A7C15  # Fibonacci hashing constant
 
+# Collective/compute overlap knobs (DESIGN.md §12).  REPRO_OVERLAP=0 is the
+# kill switch (forces the serial per-column wire); REPRO_OVERLAP_SLICES sets
+# the slice count K (clamped to a divisor of the buffer capacity at the
+# collective site, so slices stay equal-sized).
+OVERLAP_ENV = "REPRO_OVERLAP"
+OVERLAP_SLICES_ENV = "REPRO_OVERLAP_SLICES"
+DEFAULT_OVERLAP_SLICES = 4
+
+
+def overlap_slices_default() -> int:
+    """Effective slice count from the environment (1 = overlap off)."""
+    if os.environ.get(OVERLAP_ENV, "1") == "0":
+        return 1
+    try:
+        k = int(os.environ.get(OVERLAP_SLICES_ENV,
+                               str(DEFAULT_OVERLAP_SLICES)))
+    except ValueError:
+        return DEFAULT_OVERLAP_SLICES
+    return max(k, 1)
+
 
 class ShuffleStats:
-    """Trace-time accounting of what crosses the repartition collectives.
+    """Trace-time accounting of what crosses the shipping collectives.
 
-    `wire_rows` counts the buffer slots shipped through `all_to_all` per
-    plan execution (per-shard capacity × workers — the actual tensor rows on
-    the wire, masked slots included); `collectives` counts repartition sites.
-    Incremented while the shard_map body is traced, so a combiner plan —
-    whose pre-Reduce compacts to ~groups rows BEFORE the collective — shows
+    `wire_rows` counts buffer slots through a collective per plan execution
+    (per-shard capacity x workers — the actual tensor rows on the wire,
+    masked slots included); `wire_bytes` are those slots priced at the
+    batch's per-row byte width (column itemsizes + 1 validity byte), so the
+    §12 comms cost model can be validated against observed traffic.
+    `collectives`/`broadcasts` count repartition/replication SITES (logical
+    edges, independent of slicing); `dispatches` counts the collective ops
+    actually issued (serial: one per column + validity; sliced: one packed
+    op per slice); `slices` sums the slice counts, so
+    `1 - sites/slices` is the fraction of transfers with an independent
+    in-flight peer — the overlap fraction the bench reports.  Incremented
+    while the shard_map body is traced, so a combiner plan — whose
+    pre-Reduce compacts to ~groups rows BEFORE the collective — shows
     proportionally fewer wire rows than the unsplit plan
     (benchmarks/bench_aggregation.py asserts the ratio)."""
 
     def __init__(self):
-        self.wire_rows = 0
-        self.collectives = 0
+        self.clear()
 
     def clear(self) -> None:
         self.wire_rows = 0
+        self.wire_bytes = 0
         self.collectives = 0
+        self.broadcasts = 0
+        self.dispatches = 0
+        self.slices = 0
+
+    @property
+    def sites(self) -> int:
+        return self.collectives + self.broadcasts
+
+    def overlap_fraction(self) -> float:
+        """Fraction of shipped slices that had an independent in-flight
+        peer slice ((K-1)/K under uniform K-slicing; 0 when serial)."""
+        if self.slices <= 0:
+            return 0.0
+        return 1.0 - self.sites / self.slices
 
 
 _SHUFFLE_STATS = ShuffleStats()
 
 
 def shuffle_stats() -> ShuffleStats:
-    """Process-wide repartition accounting (cleared by the caller)."""
+    """Process-wide collective accounting (cleared by the caller)."""
     return _SHUFFLE_STATS
+
+
+def _account(b: M.MaskedBatch, p: int, k: int, broadcast: bool) -> None:
+    width = sum(np.dtype(v.dtype).itemsize
+                for v in b.columns.values()) + 1  # + validity byte
+    s = _SHUFFLE_STATS
+    s.wire_rows += b.capacity * p
+    s.wire_bytes += b.capacity * p * width
+    if broadcast:
+        s.broadcasts += 1
+    else:
+        s.collectives += 1
+    s.slices += k
+    if k == 1:  # serial: one collective per column, plus the validity mask
+        s.dispatches += len(b.columns) + 1
+    else:  # sliced: K packed collectives, validity rides as a payload lane
+        s.dispatches += k
 
 
 def _hash_u64(x):
@@ -103,36 +182,166 @@ def _key_hash_np(cols: Mapping, keys, n):
 
 
 # ---------------------------------------------------------------------------
+# Lane packing for sliced collectives
+#
+# All columns (plus the validity mask) are bitcast into one uint64 matrix of
+# shape [lanes, capacity], so each slice ships as a SINGLE collective op
+# regardless of column count.  8-byte dtypes bitcast to one lane; narrower
+# dtypes zero-extend into a lane (truncation on unpack is the exact inverse),
+# so packing is bit-exact for every dtype, and the reassembly below is a pure
+# transpose/reshape back to the serial receive layout — the bit-identity
+# argument of DESIGN.md §12.  Wide 8-byte lanes (rather than a uint8 byte
+# matrix) keep the pack/reassemble transposes ~8x smaller.
+# ---------------------------------------------------------------------------
+_UINT_OF = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32, 8: jnp.uint64}
+
+
+def _lane_rows(v):
+    """[capacity] column -> [lanes, capacity] uint64 (bit-exact)."""
+    dt = np.dtype(v.dtype)
+    if dt == np.bool_:
+        return v.astype(jnp.uint64)[None, :]
+    if dt.itemsize < 8:
+        u = jax.lax.bitcast_convert_type(v, _UINT_OF[dt.itemsize])
+        return u.astype(jnp.uint64)[None, :]
+    u = jax.lax.bitcast_convert_type(v, jnp.uint64)
+    return u[None, :] if u.ndim == 1 else u.T
+
+
+def _from_lane_rows(rows, dtype):
+    """Inverse of `_lane_rows`: [lanes, n] uint64 -> [n] of `dtype`."""
+    dt = np.dtype(dtype)
+    if dt == np.bool_:
+        return rows[0] != 0
+    if dt.itemsize < 8:
+        u = rows[0].astype(_UINT_OF[dt.itemsize])
+        return jax.lax.bitcast_convert_type(u, dtype)
+    if rows.shape[0] == 1:
+        return jax.lax.bitcast_convert_type(rows[0], dtype)
+    return jax.lax.bitcast_convert_type(rows.T, dtype)
+
+
+def _pack_payload(cols: Mapping):
+    """Pack columns into one uint64 [lanes, capacity] matrix."""
+    rows, meta = [], []
+    for f, v in cols.items():
+        r = _lane_rows(v)
+        rows.append(r)
+        meta.append((f, v.dtype, r.shape[0]))
+    return jnp.concatenate(rows, axis=0), meta
+
+
+def _unpack_payload(buf, meta) -> dict:
+    cols, off = {}, 0
+    for f, dt, m in meta:
+        cols[f] = _from_lane_rows(buf[off:off + m], dt)
+        off += m
+    return cols
+
+
+def _unpack_slices(recv, meta) -> dict:
+    """Reassemble K gathered slices ([W, p, cs] each, disjoint slot ranges)
+    into columns in the serial receive layout ([p*cap], peer-major).  One
+    concat per column — no full-payload transpose — because slice j holds
+    slot range [j*cs, (j+1)*cs) of every peer's block."""
+    cols, off = {}, 0
+    for f, dt, m in meta:
+        lane = jnp.concatenate([r[off:off + m] for r in recv], axis=2)
+        cols[f] = _from_lane_rows(lane.reshape(m, -1), dt)
+        off += m
+    return cols
+
+
+def _slice_count(capacity: int, slices: int) -> int:
+    """Largest divisor of `capacity` not exceeding the requested count
+    (capacities are 8·2^k buckets, so 2/4/8 divide whenever cap >= 8)."""
+    k = max(1, min(int(slices), capacity))
+    while capacity % k:
+        k -= 1
+    return k
+
+
+# ---------------------------------------------------------------------------
 # Collective shipping (inside shard_map)
 # ---------------------------------------------------------------------------
-def _repartition(b: M.MaskedBatch, keys, axis: str, p: int) -> M.MaskedBatch:
-    """Hash-partition rows by key over the `axis` workers (all_to_all)."""
+def _repartition(b: M.MaskedBatch, keys, axis: str, p: int,
+                 slices: int = 1) -> M.MaskedBatch:
+    """Hash-partition rows by key over the `axis` workers (all_to_all).
+
+    With `slices` > 1 the packed payload ships in K independent collectives
+    over disjoint slot ranges (software-pipelined wire, DESIGN.md §12).
+    Because the serial path replicates every column to all peers and lets
+    per-peer validity select rows, the payload a peer receives is identical
+    for every peer — so the sliced path ships it as K tiled all_gathers (no
+    materialized p-way replication on the send side), with the GLOBAL
+    validity packed as one extra lane; each receiver recomputes the
+    partition hash on the received key columns and keeps its own rows.
+    The hash is a pure function of column values, so the resulting mask is
+    bit-identical to the mask the serial path ships, and the slice
+    reassembly is a per-column concat back to the serial receive layout —
+    both paths return bit-identical batches."""
     if p == 1:
         return b
-    _SHUFFLE_STATS.wire_rows += b.capacity * p
-    _SHUFFLE_STATS.collectives += 1
-    tgt = (_key_hash_jnp(b.columns, keys, b.valid) % jnp.uint64(p)).astype(jnp.int32)
-    slots = jnp.arange(p, dtype=jnp.int32)
-    send_valid = b.valid[None, :] & (tgt[None, :] == slots[:, None])
+    cap = b.capacity
+    k = _slice_count(cap, slices)
+    _account(b, p, k, broadcast=False)
 
-    def ship(v):
-        sv = jnp.broadcast_to(v[None], (p,) + v.shape)
-        rv = jax.lax.all_to_all(sv, axis, split_axis=0, concat_axis=0)
-        return rv.reshape((-1,) + v.shape[1:])
+    if k == 1:  # serial reference path: one collective per column + validity
+        tgt = (_key_hash_jnp(b.columns, keys, b.valid)
+               % jnp.uint64(p)).astype(jnp.int32)
+        slots = jnp.arange(p, dtype=jnp.int32)
+        send_valid = b.valid[None, :] & (tgt[None, :] == slots[:, None])
 
-    cols = {f: ship(v) for f, v in b.columns.items()}
-    valid = jax.lax.all_to_all(send_valid, axis, split_axis=0,
-                               concat_axis=0).reshape(-1)
-    return M.MaskedBatch(cols, valid)
+        def ship(v):
+            sv = jnp.broadcast_to(v[None], (p,) + v.shape)
+            rv = jax.lax.all_to_all(sv, axis, split_axis=0, concat_axis=0)
+            return rv.reshape((-1,) + v.shape[1:])
+
+        cols = {f: ship(v) for f, v in b.columns.items()}
+        valid = jax.lax.all_to_all(send_valid, axis, split_axis=0,
+                                   concat_axis=0).reshape(-1)
+        return M.MaskedBatch(cols, valid)
+
+    payload, meta = _pack_payload(b.columns)  # [lanes, cap]
+    buf = jnp.concatenate(
+        [payload, b.valid.astype(jnp.uint64)[None, :]], axis=0)
+    cs = cap // k
+    recv = [jax.lax.all_gather(buf[:, j * cs:(j + 1) * cs], axis,
+                               axis=1, tiled=True
+                               ).reshape(buf.shape[0], p, cs)
+            for j in range(k)]
+    cols = _unpack_slices(recv, meta)
+    valid = jnp.concatenate([r[-1] for r in recv], axis=1).reshape(-1) != 0
+    tgt = (_key_hash_jnp(cols, keys, valid)
+           % jnp.uint64(p)).astype(jnp.int32)
+    return M.MaskedBatch(cols, valid & (tgt == jax.lax.axis_index(axis)))
 
 
-def _broadcast(b: M.MaskedBatch, axis: str, p: int) -> M.MaskedBatch:
-    """Replicate all rows on every worker (all_gather, tiled)."""
+def _broadcast(b: M.MaskedBatch, axis: str, p: int,
+               slices: int = 1) -> M.MaskedBatch:
+    """Replicate all rows on every worker (all_gather, tiled); sliced the
+    same way as `_repartition`, with the same bit-identity guarantee."""
     if p == 1:
         return b
-    cols = {f: jax.lax.all_gather(v, axis, axis=0, tiled=True)
-            for f, v in b.columns.items()}
-    valid = jax.lax.all_gather(b.valid, axis, axis=0, tiled=True)
+    cap = b.capacity
+    k = _slice_count(cap, slices)
+    _account(b, p, k, broadcast=True)
+
+    if k == 1:
+        cols = {f: jax.lax.all_gather(v, axis, axis=0, tiled=True)
+                for f, v in b.columns.items()}
+        valid = jax.lax.all_gather(b.valid, axis, axis=0, tiled=True)
+        return M.MaskedBatch(cols, valid)
+
+    payload, meta = _pack_payload(b.columns)
+    buf = jnp.concatenate(
+        [payload, b.valid.astype(jnp.uint64)[None, :]], axis=0)  # [W, cap]
+    cs = cap // k
+    recv = [jax.lax.all_gather(buf[:, j * cs:(j + 1) * cs], axis, axis=1,
+                               tiled=True).reshape(buf.shape[0], p, cs)
+            for j in range(k)]
+    cols = _unpack_slices(recv, meta)
+    valid = jnp.concatenate([r[-1] for r in recv], axis=1).reshape(-1) != 0
     return M.MaskedBatch(cols, valid)
 
 
@@ -143,14 +352,15 @@ def _broadcast(b: M.MaskedBatch, axis: str, p: int) -> M.MaskedBatch:
 # per-shard body executes the same fused stages as the local compiled
 # pipeline: Map chains run as one stage with a single boundary compaction;
 # shipping collectives fire at stage inputs exactly where the physical plan
-# placed them.
+# placed them, hashing the partition columns the plan chose.
 # ---------------------------------------------------------------------------
 def _exec_stages(stages, shards: Mapping[str, M.MaskedBatch],
                  axis: str, p: int, use_kernels: bool,
                  stats_memo: dict, slack: float,
                  root: Node, use_order: bool = True,
                  observe: Optional[list] = None,
-                 use_megakernel: bool = True) -> M.MaskedBatch:
+                 use_megakernel: bool = True,
+                 overlap_slices: int = 1) -> M.MaskedBatch:
     from . import pipeline as PL
     from .cost import seed_source_stats
     from ..kernels import megakernel as MK
@@ -185,27 +395,49 @@ def _exec_stages(stages, shards: Mapping[str, M.MaskedBatch],
             if use_order and order_t and not b.order:
                 b = b.with_order(order_t)
         elif how == "partition":
-            if isinstance(node, ReduceOp):
-                keys = node.key
-            elif isinstance(node, (MatchOp, CoGroupOp)):
-                keys = node.left_key if t == 0 else node.right_key
-            else:
-                raise ValueError(f"partition ship on {type(node).__name__}")
-            b = compact(_repartition(b, keys, axis, p),
+            # the optimizer's chosen partition columns (possibly a key
+            # subset) ride on Stage.ship_keys; fall back to the operator key
+            keys = None
+            if st.ship_keys and len(st.ship_keys) > t:
+                keys = st.ship_keys[t]
+            if not keys:
+                if isinstance(node, ReduceOp):
+                    keys = node.key
+                elif isinstance(node, (MatchOp, CoGroupOp)):
+                    keys = node.left_key if t == 0 else node.right_key
+                else:
+                    raise ValueError(
+                        f"partition ship on {type(node).__name__}")
+            b = compact(_repartition(b, keys, axis, p, overlap_slices),
                         st.input_plans[t].node)
         elif how == "broadcast":
-            b = _broadcast(b, axis, p)
+            b = _broadcast(b, axis, p, overlap_slices)
         else:
             raise ValueError(how)
         return b
 
-    def psum_obs(count, aux, has_aux):
+    def psum_scalar(count, aux, has_aux):
         # global (cross-shard) boundary counts: per-shard valid rows and
         # KAT/Match side-channels summed over the mesh axis — the
         # distributed leg of the adaptive feedback loop (DESIGN.md §9),
         # aggregated exactly where shuffle_stats counts the wire.  Aux-free
         # stages keep the composed convention of an un-psum'd -1.
         return (jax.lax.psum(count, axis),
+                jax.lax.psum(aux, axis) if has_aux else jnp.int32(-1))
+
+    def psum_obs(valid, aux, has_aux):
+        # sliced observation psums (DESIGN.md §12): under overlap each slot
+        # slice contributes its own psum, summed on-shard afterwards —
+        # integer sums, so the total is exactly the unsliced count while
+        # each slice's collective can overlap neighboring compute
+        k = overlap_slices if (overlap_slices > 1
+                               and valid.shape[0] % overlap_slices == 0) \
+            else 1
+        parts = valid.astype(jnp.int32).reshape(k, -1)
+        count = jnp.int32(0)
+        for j in range(k):
+            count = count + jax.lax.psum(jnp.sum(parts[j]), axis)
+        return (count,
                 jax.lax.psum(aux, axis) if has_aux else jnp.int32(-1))
 
     entries = routes or tuple(("solo", i) for i in range(len(stages)))
@@ -220,7 +452,7 @@ def _exec_stages(stages, shards: Mapping[str, M.MaskedBatch],
             out = PL.execute_stage(st, ins, use_kernels, use_order, obs)
             if observe is not None:
                 observe.append(psum_obs(
-                    jnp.sum(out.valid.astype(jnp.int32)),
+                    out.valid,
                     obs.get("groups", jnp.int32(-1)), "groups" in obs))
             results[i] = compact(out, st.top)
         else:
@@ -238,41 +470,27 @@ def _exec_stages(stages, shards: Mapping[str, M.MaskedBatch],
             raw, span_obs, _ = MK.run_span(span, ins_per, planned,
                                            use_kernels, use_order)
             if observe is not None:
-                observe.extend(psum_obs(c, a, h) for (c, a), h in
+                # span interiors surface scalar counts (the megakernel's
+                # own side-channel), so they psum unsliced
+                observe.extend(psum_scalar(c, a, h) for (c, a), h in
                                zip(span_obs, MK.span_has_aux(span)))
             results[j - 1] = compact(raw, span[-1].top)
     return results[-1]
 
 
 # ---------------------------------------------------------------------------
-# Entry point
+# Host-side source binding
 # ---------------------------------------------------------------------------
-def execute_distributed(plan: PhysPlan, bindings: Mapping[str, RecordBatch],
-                        mesh: Optional[Mesh] = None, axis: str = "data",
-                        use_kernels: bool = False, slack: float = 4.0,
-                        out_capacity: Optional[int] = None,
-                        use_order: bool = True,
-                        stats_store=None,
-                        use_megakernel: Optional[bool] = None) -> RecordBatch:
-    """Execute a physical plan data-parallel over `mesh[axis]`.
+def bind_global(root: Node, bindings: Mapping[str, RecordBatch],
+                p: int) -> dict[str, M.MaskedBatch]:
+    """Bind record batches to global mesh batches (p-divisible capacity).
 
-    Sharding preserves per-shard order for sorted sources: both the
-    partitioned-on pre-hash (stable argsort) and the round-robin block split
-    keep each shard a stable subsequence of the bound batch, so
-    `Source.sorted_on` elisions stay sound inside `shard_map`.
-
-    With `stats_store` (a `cost.StatsStore`), every stage's GLOBAL boundary
-    counts — per-shard observations psum'd over the mesh axis inside the
-    shard body — are folded into the store, feeding the same adaptive
-    calibration loop the local serving handle uses (DESIGN.md §9)."""
-    if mesh is None:
-        devs = np.array(jax.devices())
-        mesh = Mesh(devs, (axis,))
-    p = mesh.shape[axis]
-
-    # Bind sources: honor Source.partitioned_on by pre-hashing rows to shards;
-    # otherwise round-robin row sharding.
-    sources = {n.name: n for n in plan.node.iter_nodes()
+    Honors `Source.partitioned_on` by pre-hashing rows to shard blocks with
+    the same hash the device-side repartition uses; otherwise rows split
+    into contiguous per-shard blocks.  Both layouts keep each shard a stable
+    subsequence of the bound batch, so `Source.sorted_on` elisions stay
+    sound inside `shard_map`."""
+    sources = {n.name: n for n in root.iter_nodes()
                if isinstance(n, Source)}
     global_batches: dict[str, M.MaskedBatch] = {}
     for name, src in sources.items():
@@ -305,6 +523,52 @@ def execute_distributed(plan: PhysPlan, bindings: Mapping[str, RecordBatch],
             valid = np.arange(cap) < n
         global_batches[name] = M.MaskedBatch(
             {f: jnp.asarray(v) for f, v in cols.items()}, jnp.asarray(valid))
+    return global_batches
+
+
+def _default_mesh(mesh: Optional[Mesh], axis: str,
+                  mesh_shards: Optional[int]) -> Mesh:
+    if mesh is not None:
+        return mesh
+    devs = np.array(jax.devices())
+    if mesh_shards is None:
+        # default stays "all devices"; REPRO_MESH_SHARDS narrows it when set
+        mesh_shards = default_mesh_shards(len(devs)) \
+            if MESH_SHARDS_ENV in os.environ else len(devs)
+    return Mesh(devs[:max(1, min(int(mesh_shards), len(devs)))], (axis,))
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+def execute_distributed(plan: PhysPlan, bindings: Mapping[str, RecordBatch],
+                        mesh: Optional[Mesh] = None, axis: str = "data",
+                        use_kernels: bool = False, slack: float = 4.0,
+                        out_capacity: Optional[int] = None,
+                        use_order: bool = True,
+                        stats_store=None,
+                        use_megakernel: Optional[bool] = None,
+                        overlap_slices: Optional[int] = None,
+                        mesh_shards: Optional[int] = None) -> RecordBatch:
+    """Execute a physical plan data-parallel over `mesh[axis]` (one-shot:
+    re-traces per call — long-lived callers want `DistributedPlan`).
+
+    With `stats_store` (a `cost.StatsStore`), every stage's GLOBAL boundary
+    counts — per-shard observations psum'd over the mesh axis inside the
+    shard body — are folded into the store, feeding the same adaptive
+    calibration loop the local serving handle uses (DESIGN.md §9).
+
+    `overlap_slices` (default: `REPRO_OVERLAP_SLICES`, kill switch
+    `REPRO_OVERLAP=0`) slices every collective into K software-pipelined
+    transfers, bit-identical to the serial wire; `mesh_shards` bounds the
+    mesh width when no explicit `mesh` is given (default: all devices, or
+    `REPRO_MESH_SHARDS` when set)."""
+    mesh = _default_mesh(mesh, axis, mesh_shards)
+    p = mesh.shape[axis]
+    if overlap_slices is None:
+        overlap_slices = overlap_slices_default()
+
+    global_batches = bind_global(plan.node, bindings, p)
 
     from . import pipeline as PL
 
@@ -328,7 +592,7 @@ def execute_distributed(plan: PhysPlan, bindings: Mapping[str, RecordBatch],
         else:
             out = _exec_stages(stages, local, axis, p, use_kernels,
                                stats_memo, slack, plan.node, use_order,
-                               observe, use_megakernel)
+                               observe, use_megakernel, overlap_slices)
         if stats_store is None:
             return out
         # psum'd counts are replicated over the axis, so they leave the
@@ -348,3 +612,136 @@ def execute_distributed(plan: PhysPlan, bindings: Mapping[str, RecordBatch],
     PL.record_batch_obs(stats_store, stages, obs["src"], obs["out"],
                         obs["aux"])
     return out.to_record_batch()
+
+
+class DistributedPlan:
+    """Cached, jitted distributed serving handle (mesh analogue of
+    `pipeline.CompiledPlan`).
+
+    Lowers the physical plan once, then compiles one jitted shard_map
+    executable per (layout, source signature, observe) key in a shared
+    `pipeline.ExecutableCache` — the layout (per-stage ship strategies and
+    partition columns via `pipeline._order_sig`, the mesh width `p`, the
+    overlap slice count, megakernel routing) joins the executable identity,
+    so plans that differ only in wire choices never alias and warm serving
+    never re-traces.
+
+    `run(bindings)` host-binds then executes; `run_device(staged)` is the
+    mesh serving path for batches already bound via `bind` (device-resident
+    across calls, no host round-trip)."""
+
+    def __init__(self, plan, mesh: Optional[Mesh] = None, axis: str = "data",
+                 mesh_shards: Optional[int] = None,
+                 overlap_slices: Optional[int] = None,
+                 use_kernels: bool = False, slack: float = 4.0,
+                 use_order: bool = True,
+                 use_megakernel: Optional[bool] = None, cache=None):
+        from . import pipeline as PL
+
+        plan = getattr(plan, "best", plan)   # OptResult / LayoutResult
+        plan = getattr(plan, "plan", plan)   # RankedPlan
+        if not isinstance(plan, PhysPlan):
+            raise TypeError(f"expected a PhysPlan, got {type(plan).__name__}")
+        self.plan = plan
+        self.axis = axis
+        self.mesh = _default_mesh(mesh, axis, mesh_shards)
+        self.p = self.mesh.shape[axis]
+        self.overlap_slices = overlap_slices_default() \
+            if overlap_slices is None else max(1, int(overlap_slices))
+        self.use_kernels = use_kernels
+        self.slack = float(slack)
+        self.use_order = use_order
+        self.use_megakernel = PL._megakernel_default() \
+            if use_megakernel is None else use_megakernel
+        self.cache = cache if cache is not None else PL.executable_cache()
+        self.stages = PL.lower_phys(plan)
+        self._sem = PL._Interned((
+            PL.semantic_key(plan.node), PL._order_sig(self.stages), self.p,
+            self.overlap_slices, self.use_megakernel, self.use_kernels,
+            self.slack, self.use_order))
+
+    # -- binding ---------------------------------------------------------
+    def bind(self, bindings: Mapping[str, RecordBatch]) -> dict:
+        """Host-bind a request to global mesh batches (reusable across
+        `run_device` calls)."""
+        return bind_global(self.plan.node, bindings, self.p)
+
+    def _source_sig(self, staged: Mapping[str, M.MaskedBatch]) -> tuple:
+        return tuple(
+            (n, staged[n].capacity,
+             tuple((f, str(v.dtype))
+                   for f, v in staged[n].columns.items()))
+            for n in sorted(staged))
+
+    # -- execution -------------------------------------------------------
+    def _executable(self, staged: Mapping[str, M.MaskedBatch],
+                    observe: bool):
+        key = (self._sem, self._source_sig(staged), observe)
+        fn = self.cache.get(key)
+        if fn is not None:
+            return fn
+        names = sorted(staged)
+        in_specs = tuple(jax.tree.map(lambda _: P(self.axis), staged[n])
+                         for n in names)
+        out_specs = P(self.axis) if not observe else (P(self.axis), P())
+        plan, p, axis, cache = self.plan, self.p, self.axis, self.cache
+        stages = self.stages
+        use_kernels, slack = self.use_kernels, self.slack
+        use_order, use_megakernel = self.use_order, self.use_megakernel
+        overlap = self.overlap_slices
+
+        @functools.partial(
+            _shard_map, mesh=self.mesh, in_specs=in_specs,
+            out_specs=out_specs, **{_CHECK_KW: False})
+        def run(*shards):
+            cache.traces += 1  # trace-time side effect (CacheStats.traces)
+            local = dict(zip(names, shards))
+            obs_acc: Optional[list] = [] if observe else None
+            if not stages:
+                out = local[plan.node.name]
+            else:
+                out = _exec_stages(stages, local, axis, p, use_kernels,
+                                   {}, slack, plan.node, use_order,
+                                   obs_acc, use_megakernel, overlap)
+            if not observe:
+                return out
+            src = {n: jax.lax.psum(jnp.sum(b.valid.astype(jnp.int32)), axis)
+                   for n, b in local.items()}
+            return out, {"src": src,
+                         "out": tuple(o[0] for o in (obs_acc or ())),
+                         "aux": tuple(o[1] for o in (obs_acc or ()))}
+
+        fn = jax.jit(run)
+        self.cache.put(key, fn)
+        return fn
+
+    def run_device(self, staged: Mapping[str, M.MaskedBatch],
+                   stats_store=None) -> M.MaskedBatch:
+        """Execute on already-bound global batches; returns the global
+        output batch (device-resident — chain into further mesh steps)."""
+        from . import pipeline as PL
+
+        fn = self._executable(staged, stats_store is not None)
+        args = [staged[n] for n in sorted(staged)]
+        if stats_store is None:
+            return fn(*args)
+        out, obs = fn(*args)
+        obs = jax.device_get(obs)
+        PL.record_batch_obs(stats_store, self.stages, obs["src"],
+                            obs["out"], obs["aux"])
+        return out
+
+    def run(self, bindings: Mapping[str, RecordBatch],
+            stats_store=None) -> RecordBatch:
+        """Host-bind + execute + fetch: the one-call serving step."""
+        out = self.run_device(self.bind(bindings), stats_store=stats_store)
+        return out.to_record_batch()
+
+    def cache_stats(self):
+        return self.cache.stats()
+
+
+def compile_distributed(plan, **kwargs) -> DistributedPlan:
+    """Build a `DistributedPlan` from a PhysPlan / RankedPlan / OptResult
+    (see `DistributedPlan` for the kwargs)."""
+    return DistributedPlan(plan, **kwargs)

@@ -32,7 +32,7 @@ from .cost import estimate
 from .enumeration import RewriteEngine, _mtab_key, closure, enumerate_plans
 from .operators import MapOp, Node, ReduceOp, Source, commute_id
 from .physical import (Ctx, PhysPlan, _expand, _prune, best_physical,
-                       cost_lower_bound)
+                       cost_lower_bound, default_mesh_shards, dop_ladder)
 from .reorder import reorderable
 
 
@@ -329,6 +329,52 @@ def optimize(flow: Node, ctx: Optional[Ctx] = None, max_plans: int = 20000,
     return OptResult(best=ranked[0], ranked=tuple(ranked),
                      enumeration_s=total_s - costing_s, costing_s=costing_s,
                      num_enumerated=num_enumerated, num_pruned=num_pruned)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutResult:
+    """Outcome of the sharding-aware layout sweep (`optimize_layout`).
+
+    `result` is the full `OptResult` at the winning degree of parallelism
+    `dop`; `per_dop` records `(dop, best_cost)` for every ladder rung, so
+    benches and tests can see WHY a layout won (latency-bound small batches
+    collapse to dop=1; bandwidth/compute-bound deployments spread to the
+    full mesh)."""
+
+    result: OptResult
+    dop: int
+    per_dop: tuple
+
+    @property
+    def best(self) -> RankedPlan:
+        return self.result.best
+
+
+def optimize_layout(flow: Node, mesh_shards: Optional[int] = None,
+                    ctx: Optional[Ctx] = None, max_plans: int = 20000,
+                    include_commutes: bool = True,
+                    prune: bool = True) -> LayoutResult:
+    """Sharding-aware optimization: sweep dop over `dop_ladder(mesh)`.
+
+    Every rung reruns the full interleaved search under a context whose
+    `dop` changes the net terms (shuffle shares, collective launch latency),
+    the per-worker mem/cpu division, AND the combiner output estimates
+    (`min(rows, groups*dop)`) — so the shard layout is chosen by the same
+    §7.1 cost model as every other physical property, not taken as an
+    input.  `mesh_shards` defaults to `REPRO_MESH_SHARDS` (8)."""
+    base = ctx or Ctx()
+    mesh = mesh_shards if mesh_shards is not None else default_mesh_shards()
+    per: list[tuple[int, float]] = []
+    best: Optional[tuple[int, OptResult]] = None
+    for d in dop_ladder(mesh):
+        res = optimize(flow, dataclasses.replace(base, dop=d),
+                       max_plans=max_plans,
+                       include_commutes=include_commutes, prune=prune)
+        per.append((d, res.best.cost))
+        if best is None or res.best.cost < best[1].best.cost:
+            best = (d, res)
+    assert best is not None
+    return LayoutResult(result=best[1], dop=best[0], per_dop=tuple(per))
 
 
 def optimize_two_phase(flow: Node, ctx: Optional[Ctx] = None,

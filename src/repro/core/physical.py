@@ -19,11 +19,22 @@ exactly the integration sketched in the paper's Sec. 6 closing paragraphs.
 Cost model: wall-clock seconds per term on the TARGET fabric
 (`repro.hw.CHIP`, TPU v5e by default):
 
-    net: shuffled/broadcast bytes over per-chip ICI link bandwidth
+    net: shuffled/broadcast bytes over per-chip ICI link bandwidth, plus a
+         per-collective launch latency (`ChipSpec.ici_latency_s`, scaled by
+         log2(p) hops) — small batches pay the collective's fixed cost, so
+         `dop` itself becomes a costed layout decision (DESIGN.md §12)
     mem: input+output bytes over per-chip HBM bandwidth
     cpu: UDF flops + sort/probe flops over the VPU's scalar throughput
 
 The paper's disk-I/O term becomes the HBM term (DESIGN.md §3.4).
+
+Layout as a plan property: besides choosing partition vs. broadcast per
+input, a multi-column Reduce may hash-partition on any single key column
+(same wire cost, strictly more reusable co-location class), and
+`optimizer.optimize_layout` sweeps `dop` over `dop_ladder(mesh)` so the
+degree of parallelism is picked by the same cost model.  The chosen
+partition columns travel on `PhysPlan.ship_keys` into `pipeline.lower_phys`
+and the distributed runtime.
 """
 
 from __future__ import annotations
@@ -31,6 +42,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+import os
 from typing import Optional
 
 from .. import hw
@@ -40,6 +52,36 @@ from .operators import (CoGroupOp, CrossOp, MapOp, MatchOp, Node, ReduceOp,
 from .reorder import eff_writes
 
 UDF_VECTOR_FLOPS = 4e12  # VPU-class throughput for record-wise UDF work
+
+# mesh width the layout search prices against when the caller gives none
+MESH_SHARDS_ENV = "REPRO_MESH_SHARDS"
+DEFAULT_MESH_SHARDS = 8
+
+
+def default_mesh_shards(available: Optional[int] = None) -> int:
+    """Mesh width for layout decisions: REPRO_MESH_SHARDS, clipped to the
+    device count when one is known."""
+    try:
+        n = int(os.environ.get(MESH_SHARDS_ENV, str(DEFAULT_MESH_SHARDS)))
+    except ValueError:
+        n = DEFAULT_MESH_SHARDS
+    n = max(n, 1)
+    if available is not None:
+        n = min(n, max(available, 1))
+    return n
+
+
+def dop_ladder(mesh: int) -> tuple[int, ...]:
+    """Candidate degrees of parallelism: powers of two up to `mesh`, plus
+    `mesh` itself — the sweep `optimizer.optimize_layout` prices."""
+    mesh = max(int(mesh), 1)
+    out = []
+    d = 1
+    while d < mesh:
+        out.append(d)
+        d *= 2
+    out.append(mesh)
+    return tuple(out)
 
 
 # ---------------------------------------------------------------------------
@@ -113,6 +155,11 @@ class PhysPlan:
     local: str = "scan"
     props: Props = Props()
     node_cost: CostVec = CostVec()
+    # per input: the hash-partition columns when ship is 'partition' (None
+    # otherwise / empty when defaulted).  A multi-column Reduce may partition
+    # on a key SUBSET for a more reusable co-location class; the runtime must
+    # then hash exactly these columns or downstream 'forward' ships break.
+    ship_keys: tuple = ()
 
     @property
     def total_cost(self) -> CostVec:
@@ -140,16 +187,30 @@ class PhysPlan:
 # ---------------------------------------------------------------------------
 # Cost primitives
 # ---------------------------------------------------------------------------
+def _t_latency(ctx: Ctx) -> float:
+    """Fixed launch cost of one collective: log2(p) hop latencies.  Zero at
+    dop=1 (no collective fires), so small-batch layouts can beat wide ones —
+    the term that makes `dop` a real costed decision rather than an input."""
+    p = ctx.dop
+    if p <= 1:
+        return 0.0
+    return ctx.chip.ici_latency_s * math.log2(p)
+
+
 def _t_shuffle(bytes_total: float, ctx: Ctx) -> float:
     """all_to_all hash repartition: each worker sends its (p-1)/p share."""
     p = ctx.dop
-    return (bytes_total / p) * (p - 1) / p / ctx.link_bw
+    if p <= 1:
+        return 0.0
+    return (bytes_total / p) * (p - 1) / p / ctx.link_bw + _t_latency(ctx)
 
 
 def _t_broadcast(bytes_total: float, ctx: Ctx) -> float:
     """all_gather replicate: each worker receives the (p-1)/p remainder."""
     p = ctx.dop
-    return bytes_total * (p - 1) / p / ctx.link_bw
+    if p <= 1:
+        return 0.0
+    return bytes_total * (p - 1) / p / ctx.link_bw + _t_latency(ctx)
 
 
 def _t_mem(bytes_in: float, bytes_out: float, ctx: Ctx) -> float:
@@ -302,10 +363,21 @@ def _expand(node: Node, ctx: Ctx, stats_memo: dict,
         for iprops, iplan in child_cands[0].items():
             options = []
             if iprops.partitioned_on(kset):
-                options.append(("forward", 0.0, iprops.partitions))
-            options.append(("partition", _t_shuffle(cin.bytes, ctx),
-                            frozenset({kset})))
-            for ship, net, parts in options:
+                options.append(("forward", 0.0, iprops.partitions, None))
+            shuffle_net = _t_shuffle(cin.bytes, ctx)
+            options.append(("partition", shuffle_net, frozenset({kset}),
+                            tuple(node.key)))
+            # partition-key choice (DESIGN.md §12): hashing any SINGLE key
+            # column still co-locates every full-key group (equal key ⇒
+            # equal column), costs the same wire bytes, and leaves a
+            # strictly more reusable co-location class {k} that downstream
+            # consumers keyed on supersets of {k} can forward into
+            if len(node.key) > 1:
+                for k in node.key:
+                    if k in node.attrs():
+                        options.append(("partition", shuffle_net,
+                                        frozenset({frozenset({k})}), (k,)))
+            for ship, net, parts, pkeys in options:
                 presorted = ship == "forward" and iprops.sorted_on(kset)
                 local = "reuse-sort" if presorted else "sort"
                 cpu = cin.rows * node.hints.cpu_flops_per_record
@@ -325,7 +397,8 @@ def _expand(node: Node, ctx: Ctx, stats_memo: dict,
                                                    if g <= node.attrs()),
                               sort=tuple(out_sort))
                 out.append(PhysPlan(node=node, inputs=(iplan,), ship=(ship,),
-                                    local=local, props=props, node_cost=cost))
+                                    local=local, props=props, node_cost=cost,
+                                    ship_keys=(pkeys,)))
                 # fused whole-stage lowering: a forwarded Map chain feeding
                 # the aggregate keeps its output VMEM-resident, eliding the
                 # input re-read from the HBM term (DESIGN.md §10) — only
@@ -339,7 +412,8 @@ def _expand(node: Node, ctx: Ctx, stats_memo: dict,
                                     cpu=_t_cpu(cpu, ctx))
                     out.append(PhysPlan(node=node, inputs=(iplan,),
                                         ship=(ship,), local="megakernel",
-                                        props=props, node_cost=mcost))
+                                        props=props, node_cost=mcost,
+                                        ship_keys=(pkeys,)))
 
     elif isinstance(node, (MatchOp, CrossOp)):
         ls = estimate(node.left, stats_memo, ctx.dop)
@@ -377,9 +451,13 @@ def _expand(node: Node, ctx: Ctx, stats_memo: dict,
                 cost = CostVec(net=net,
                                mem=_t_mem(ls.bytes + rs.bytes, st.bytes, ctx),
                                cpu=_t_cpu(cpu, ctx))
-                out.append(PhysPlan(node=node, inputs=(lplan, rplan),
-                                    ship=(lship, rship), local=local,
-                                    props=props, node_cost=cost))
+                out.append(PhysPlan(
+                    node=node, inputs=(lplan, rplan), ship=(lship, rship),
+                    local=local, props=props, node_cost=cost,
+                    ship_keys=(
+                        tuple(node.left_key) if lship == "partition" else None,
+                        tuple(node.right_key) if rship == "partition"
+                        else None)))
         # (B)/(C) broadcast one side, probe in the other side's order —
         # preserves the forwarded side's partitioning & sort (the Q15
         # physical flip in the paper's Sec. 7.3).  A broadcast destroys the
@@ -421,12 +499,13 @@ def _expand(node: Node, ctx: Ctx, stats_memo: dict,
                 inputs = (fplan, cheap_r) if bc_side == 1 else (cheap_l, fplan)
                 out.append(PhysPlan(
                     node=node, inputs=inputs, ship=ship, local="probe",
-                    props=_preserved(fprops, node), node_cost=cost))
+                    props=_preserved(fprops, node), node_cost=cost,
+                    ship_keys=(None, None)))
                 if mega:
                     out.append(PhysPlan(
                         node=node, inputs=inputs, ship=ship,
                         local="megakernel", props=_preserved(fprops, node),
-                        node_cost=mcost))
+                        node_cost=mcost, ship_keys=(None, None)))
 
     elif isinstance(node, CoGroupOp):
         ls = estimate(node.left, stats_memo, ctx.dop)
@@ -445,9 +524,12 @@ def _expand(node: Node, ctx: Ctx, stats_memo: dict,
             cost = CostVec(net=net,
                            mem=_t_mem(ls.bytes + rs.bytes, st.bytes, ctx),
                            cpu=_t_cpu(cpu, ctx))
-            out.append(PhysPlan(node=node, inputs=(lplan, rplan),
-                                ship=(lship, rship), local="sort",
-                                props=props, node_cost=cost))
+            out.append(PhysPlan(
+                node=node, inputs=(lplan, rplan), ship=(lship, rship),
+                local="sort", props=props, node_cost=cost,
+                ship_keys=(
+                    tuple(node.left_key) if lship == "partition" else None,
+                    tuple(node.right_key) if rship == "partition" else None)))
     else:
         raise TypeError(type(node).__name__)
 

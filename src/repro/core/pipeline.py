@@ -276,6 +276,10 @@ class Stage:
     input_plans: tuple = ()
     in_orders: tuple = ()
     out_order: tuple = ()
+    # per input: hash-partition columns chosen by the physical layout (the
+    # optimizer may partition a multi-column Reduce on a key SUBSET); empty
+    # or None entries fall back to the operator's own key at runtime
+    ship_keys: tuple = ()
 
     @property
     def top(self) -> Node:
@@ -422,14 +426,14 @@ def lower_phys(plan: PhysPlan) -> tuple[Stage, ...]:
             return M.order_prefix(p.props.sort, p.node.out_schema.fields)
         return ref_order.get(ref, ())
 
-    def emit(kind, ops, inputs, ship, in_orders, input_plans):
+    def emit(kind, ops, inputs, ship, in_orders, input_plans, ship_keys=()):
         # a shipped (non-forward) input arrives order-free on every worker
         in_orders = tuple(o if s == "forward" else ()
                           for o, s in zip(in_orders, ship))
         out_order = _stage_out_order(kind, ops[-1], in_orders, ops)
         stages.append(Stage(kind=kind, ops=ops, inputs=inputs, ship=ship,
                             input_plans=input_plans, in_orders=in_orders,
-                            out_order=out_order))
+                            out_order=out_order, ship_keys=ship_keys))
         ref = ("stage", len(stages) - 1)
         ref_order[ref] = out_order
         return ref
@@ -457,7 +461,7 @@ def lower_phys(plan: PhysPlan) -> tuple[Stage, ...]:
             in_orders = tuple(order_of(r, ip)
                               for r, ip in zip(refs, p.inputs))
             ref = emit(_KIND[type(node)], (node,), refs, p.ship, in_orders,
-                       p.inputs)
+                       p.inputs, p.ship_keys)
         memo[id(p)] = ref
         return ref
 
@@ -470,8 +474,10 @@ def lower_phys(plan: PhysPlan) -> tuple[Stage, ...]:
 def _order_sig(stages: Sequence[Stage]) -> tuple:
     """Fingerprint of every order assumption a lowered stage list bakes into
     its trace (part of the executable-cache key: two lowerings of the same
-    flow that elide different sorts must not share an executable)."""
-    return tuple((st.kind, st.ship, st.in_orders, st.out_order)
+    flow that elide different sorts must not share an executable; layouts —
+    ship strategies and chosen partition columns — join the key the same
+    way, so distributed plans with different wire choices never alias)."""
+    return tuple((st.kind, st.ship, st.ship_keys, st.in_orders, st.out_order)
                  for st in stages)
 
 

@@ -18,6 +18,7 @@ class ChipSpec:
     ici_link_bandwidth: float  # bytes/s per ICI link
     dcn_bandwidth: float    # bytes/s per chip across pods (data-center network)
     vmem_bytes: int         # per-core VMEM
+    ici_latency_s: float = 1e-6  # per-collective launch + link latency (s)
 
 
 TPU_V5E = ChipSpec(
@@ -28,6 +29,7 @@ TPU_V5E = ChipSpec(
     ici_link_bandwidth=50e9,
     dcn_bandwidth=6.25e9,  # ~25 GB/s per host / 4 chips
     vmem_bytes=128 * 1024**2,
+    ici_latency_s=1e-6,
 )
 
 # Default chip used throughout.

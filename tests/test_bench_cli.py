@@ -12,7 +12,7 @@ _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 EXPECTED_BENCHES = {"q7", "q15", "textmining", "clickstream", "sca",
                     "enumeration", "pipeline", "aggregation", "adaptive",
-                    "serving", "roofline"}
+                    "serving", "roofline", "distributed"}
 
 
 def _run_cli(*args, timeout=180):
@@ -136,6 +136,53 @@ def test_pipeline_vs_eager_fails_on_missing_metric(gate_env):
     errors = []
     cr.check_pipeline_vs_eager(1.0, errors)
     assert any("eager_bps" in e for e in errors), errors
+
+
+def _dist_doc(eff, serial):
+    return {"bench": "distributed",
+            "rows": [{"flow": "shards-8", "rows": 65536, "mesh_bps": 30.0}],
+            "weak_scaling_efficiency": eff,
+            "weak_scaling_efficiency_serial": serial,
+            "overlap_fraction": 0.75, "dispatch_reduction": 2.0,
+            "bit_identical": True}
+
+
+def test_weak_scaling_gate_floor_and_strictness(gate_env):
+    """DESIGN.md §12 bar: floor in both artifacts, strict overlap-beats-
+    serial on the committed baseline, 0.85x noise band on the quick run."""
+    cr, _ = gate_env
+
+    def wdoc(quick, doc):
+        with open(cr.baseline_path("distributed", quick), "w") as f:
+            json.dump(doc, f)
+
+    wdoc(False, _dist_doc(0.72, 0.65))
+    wdoc(True, _dist_doc(0.63, 0.70))  # within 0.85x of serial: tolerated
+    errors = []
+    cr.check_weak_scaling(0.6, errors)
+    assert errors == [], errors
+
+    # committed baseline must beat serial STRICTLY even above the floor
+    wdoc(False, _dist_doc(0.65, 0.72))
+    errors = []
+    cr.check_weak_scaling(0.6, errors)
+    assert any("does not beat serial" in e for e in errors), errors
+
+    # below the floor fails regardless of the serial comparison
+    wdoc(False, _dist_doc(0.5, 0.4))
+    errors = []
+    cr.check_weak_scaling(0.6, errors)
+    assert any("below floor" in e for e in errors), errors
+
+    # a sliced schedule that never ran (zero overlap) fails loudly
+    broken = _dist_doc(0.72, 0.65)
+    broken["overlap_fraction"] = 0.0
+    broken["dispatch_reduction"] = 1.0
+    wdoc(False, broken)
+    errors = []
+    cr.check_weak_scaling(0.6, errors)
+    assert any("overlap fraction is zero" in e for e in errors), errors
+    assert any("dispatch reduction" in e for e in errors), errors
 
 
 def test_enumeration_quick_subset_is_declared_not_silent(gate_env):

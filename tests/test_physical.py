@@ -92,3 +92,93 @@ def test_pareto_keeps_property_plans():
     # it offers co-located keys to downstream consumers
     assert len(cands) >= 2
     assert any(p.partitioned_on(frozenset({"k"})) for p in cands)
+
+
+# ---------------------------------------------------------------------------
+# Sharding-aware layout costing (§12): dop ladder, latency term, subset keys
+# ---------------------------------------------------------------------------
+def test_dop_ladder_powers_of_two_plus_mesh():
+    from repro.core.physical import dop_ladder
+
+    assert dop_ladder(8) == (1, 2, 4, 8)
+    assert dop_ladder(6) == (1, 2, 4, 6)
+    assert dop_ladder(1) == (1,)
+
+
+def test_collective_latency_term():
+    from repro import hw
+    from repro.core.physical import _t_broadcast, _t_latency, _t_shuffle
+
+    c1, c8 = Ctx(dop=1), Ctx(dop=8)
+    assert _t_latency(c1) == 0.0
+    assert _t_shuffle(1e6, c1) == 0.0 and _t_broadcast(1e6, c1) == 0.0
+    assert _t_latency(c8) == 3 * hw.TPU_V5E.ici_latency_s
+    # even a zero-byte collective pays the launch latency at p > 1
+    assert _t_shuffle(0.0, c8) == _t_latency(c8)
+    assert _t_broadcast(0.0, c8) == _t_latency(c8)
+
+
+def test_pk_join_small_build_side_broadcasts_at_mesh_dop():
+    """Plan-choice acceptance: on the 8-way mesh the optimizer picks
+    'broadcast the small PK side' over hash repartition of both sides."""
+    big = F.source("Big", Schema.of(sk=np.int64, x=np.int64),
+                   num_records=100_000_000)
+    sup = F.source("Sup", Schema.of(jk=np.int64, sv=np.int64),
+                   num_records=1_000)
+    j = F.match(big, sup, ["sk"], ["jk"], name="J",
+                hints=Hints(pk_side="right"))
+    plan = best_physical(j, Ctx(dop=8))
+    assert plan.ship == ("forward", "broadcast")
+    assert plan.ship_keys == (None, None)
+
+
+def test_chained_reduce_partitions_on_subset_key():
+    """Reduce{a,b} below Reduce{a}: the inner shuffle hash-partitions on
+    the single column 'a' (equal full key implies equal subset, same wire
+    cost, reusable co-location), so the outer reduce forwards — the
+    'keep the combiner's partitioning' layout of DESIGN.md §12."""
+    S = Schema.of(a=np.int64, b=np.int64, v=np.int64)
+    src = F.source("I", S, num_records=10_000_000)
+
+    def agg2(g, out):
+        out.emit(g.keys().set("s", g.sum("v")))
+
+    r1 = F.reduce_(src, ["a", "b"], agg2, name="R1",
+                   hints=Hints(distinct_keys=100_000))
+
+    def agg1(g, out):
+        out.emit(g.keys().set("t", g.sum("s")))
+
+    r2 = F.reduce_(r1, ["a"], agg1, name="R2",
+                   hints=Hints(distinct_keys=1_000))
+    plan = best_physical(r2, Ctx(dop=8))
+    assert plan.ship == ("forward",), plan.ship
+    inner = plan.inputs[0]
+    assert "partition" in inner.ship
+    assert inner.ship_keys == (("a",),), inner.ship_keys
+    assert inner.props.partitioned_on(frozenset({"a"}))
+
+
+def test_optimize_layout_prices_dop():
+    """dop is a costed decision: a tiny flow stays at dop=1 (collective
+    latency dominates), a huge flow takes the full mesh."""
+    from repro.core.optimizer import optimize_layout
+    from repro.core.physical import dop_ladder
+
+    S = Schema.of(a=np.int64, b=np.int64, v=np.int64)
+
+    def agg(g, out):
+        out.emit(g.keys().set("s", g.sum("v")))
+
+    tiny = F.reduce_(F.source("T", S, num_records=2_000), ["a", "b"], agg,
+                     name="RT", hints=Hints(distinct_keys=64))
+    lt = optimize_layout(tiny, mesh_shards=8)
+    huge = F.reduce_(F.source("H", S, num_records=500_000_000), ["a", "b"],
+                     agg, name="RH", hints=Hints(distinct_keys=1_000_000))
+    lh = optimize_layout(huge, mesh_shards=8)
+    assert lt.dop == 1 and lh.dop == 8
+    assert len(lt.per_dop) == len(dop_ladder(8))
+    # per_dop is (dop, cost) pairs covering the ladder, best is the argmin
+    costs = dict(lh.per_dop)
+    assert costs[8] == min(costs.values())
+    assert lh.best is lh.result.best  # .best is the winning RankedPlan
