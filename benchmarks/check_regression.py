@@ -40,6 +40,15 @@ them without code changes:
     BENCH_MIN_CROSSOVER_16K        16k-row serving/eager floor   (default 1.0)
     BENCH_MIN_SERVE_VS_SOLO        engine/summed-solo rate floor (default 0.9)
     BENCH_MIN_WEAK_SCALING         8-shard weak-scaling floor    (default 0.6)
+    BENCH_MIN_SUBPLAN_SHARING      shared/unshared serving floor (default 1.1)
+    BENCH_MIN_LIMIT_PUSHDOWN       pushed/at-root limit floor    (default 1.05)
+
+Subplan-sharing bar (DESIGN.md §13): BOTH serving artifacts must show the
+cross-tenant shared-prefix workload serving >= `min-subplan-sharing` x the
+same engine with sharing disabled, and the optimized
+limit(heavy-map(sorted source)) plan executing >= `min-limit-pushdown` x
+the limit-at-root lowering on the reference per-op executor — both ratios
+are within-run, so they are machine-independent.
 
 Weak-scaling bar (DESIGN.md §12): BOTH distributed artifacts must show
 `weak_scaling_efficiency` (overlap wire, full mesh width) >= the floor,
@@ -307,6 +316,32 @@ def check_serving_floor(floor: float, errors: list[str]) -> None:
                   "drift swap observed")
 
 
+def check_subplan_sharing(floor: float, limit_floor: float,
+                          errors: list[str]) -> None:
+    """Acceptance bar (DESIGN.md §13): the cross-tenant shared-prefix
+    workload must serve >= `floor` x the sharing-disabled engine, and limit
+    pushdown must execute >= `limit_floor` x the limit-at-root lowering, in
+    BOTH the committed baseline and the quick run."""
+    for quick in (False, True):
+        path = baseline_path("serving", quick=quick)
+        if not os.path.exists(path):
+            return  # already reported by check_bench
+        tag = "quick" if quick else "baseline"
+        doc = _load(path)
+        n_before = len(errors)
+        share = doc.get("subplan_sharing")
+        if share is None or share < floor:
+            errors.append(f"serving[{tag}]: subplan_sharing {share} below "
+                          f"floor {floor}")
+        lim = doc.get("limit_pushdown")
+        if lim is None or lim < limit_floor:
+            errors.append(f"serving[{tag}]: limit_pushdown {lim} below "
+                          f"floor {limit_floor}")
+        if len(errors) == n_before:
+            print(f"ok serving[{tag}]: subplan_sharing {share} >= {floor}, "
+                  f"limit_pushdown {lim} >= {limit_floor}")
+
+
 def check_weak_scaling(floor: float, errors: list[str]) -> None:
     """Acceptance bar (DESIGN.md §12): at the full mesh width the sliced
     overlap wire must retain >= `floor` of perfect weak scaling and its
@@ -375,6 +410,12 @@ def main() -> None:
     ap.add_argument("--min-weak-scaling", type=float, default=float(
         os.environ.get("BENCH_MIN_WEAK_SCALING", "0.6")),
         help="required 8-shard weak-scaling efficiency with overlap on")
+    ap.add_argument("--min-subplan-sharing", type=float, default=float(
+        os.environ.get("BENCH_MIN_SUBPLAN_SHARING", "1.1")),
+        help="required shared-prefix vs sharing-disabled serving floor")
+    ap.add_argument("--min-limit-pushdown", type=float, default=float(
+        os.environ.get("BENCH_MIN_LIMIT_PUSHDOWN", "1.05")),
+        help="required pushed vs limit-at-root execution rate floor")
     args = ap.parse_args()
 
     errors: list[str] = []
@@ -386,6 +427,8 @@ def main() -> None:
     check_adaptive_recovery(args.min_adaptive_recovery, errors)
     check_crossover_16k(args.min_crossover_16k, errors)
     check_serving_floor(args.min_serve_vs_solo, errors)
+    check_subplan_sharing(args.min_subplan_sharing, args.min_limit_pushdown,
+                          errors)
     check_weak_scaling(args.min_weak_scaling, errors)
 
     if errors:

@@ -22,8 +22,8 @@ import dataclasses
 import math
 from typing import Mapping, Optional, Sequence
 
-from .operators import (CoGroupOp, CrossOp, Hints, MapOp, MatchOp, Node,
-                        ReduceOp, Source, struct_id)
+from .operators import (CoGroupOp, CrossOp, Hints, LimitOp, MapOp, MatchOp,
+                        Node, ReduceOp, Source, struct_id)
 from .udf import Card, KatEmit
 
 # Selectivity defaults by detected cardinality class
@@ -110,6 +110,17 @@ def estimate(node: Node, memo: Optional[dict] = None, dop: int = 1) -> Stats:
         else:  # PER_GROUP, MANY
             rows = groups
         st = Stats(rows=rows, width=width, distinct=groups)
+    elif isinstance(node, LimitOp):
+        cin = estimate(node.child, memo, dop)
+        rows = min(cin.rows, float(node.k)) if cin.rows else cin.rows
+        distinct = min(cin.distinct, rows) if cin.distinct is not None else None
+        st = Stats(rows=rows, width=width, distinct=distinct)
+    elif isinstance(node, MatchOp) and node.anti:
+        ls = estimate(node.left, memo, dop)
+        estimate(node.right, memo, dop)  # priced for its own compute, not rows
+        sel = node.hints.selectivity if node.hints.selectivity is not None \
+            else DEFAULT_FILTER_SELECTIVITY
+        st = Stats(rows=ls.rows * sel, width=width, distinct=ls.distinct)
     elif isinstance(node, MatchOp):
         ls, rs = estimate(node.left, memo, dop), estimate(node.right, memo, dop)
         # the UDF-level selectivity is applied exactly once, via the shared
@@ -408,6 +419,12 @@ def _stage_expected(nodes: Sequence[Node], rows_in: Sequence[float],
         if ke is KatEmit.PER_GROUP_FILTER:
             return groups * gsel
         return groups
+    if isinstance(top, LimitOp):
+        return min(in0, float(top.k)) if in0 else in0
+    if isinstance(top, MatchOp) and top.anti:
+        sel = h.selectivity if h.selectivity is not None \
+            else DEFAULT_FILTER_SELECTIVITY
+        return in0 * sel
     if isinstance(top, MatchOp):
         if h.join_fanout is not None:
             rows = in0 * h.join_fanout
@@ -545,6 +562,17 @@ def calibrate_hints(root: Node, store: StatsStore, prior_weight: float = 4.0,
                     prior_gs, rout / groups_obs, obs.batches, prior_weight)))
             if new:
                 posterior[top.name] = dataclasses.replace(h, **new)
+        elif isinstance(top, MatchOp) and top.anti:
+            # an anti join is a global filter on the left side: the observed
+            # survivor fraction IS its selectivity (join_fanout untouched —
+            # the anti estimator never reads it)
+            prior_s = top.hints.selectivity \
+                if top.hints.selectivity is not None \
+                else DEFAULT_FILTER_SELECTIVITY
+            s = min(1.0, q(_blend(prior_s, rout / in0, obs.batches,
+                                  prior_weight)))
+            posterior[top.name] = dataclasses.replace(
+                top.hints, selectivity=s)
         elif isinstance(top, MatchOp):
             # fold the complete observed fanout (UDF selectivity included)
             # into join_fanout; selectivity pinned to 1.0 so the estimator

@@ -450,6 +450,15 @@ def _exec_stages(stages, shards: Mapping[str, M.MaskedBatch],
                    for t, (ref, how) in enumerate(zip(st.inputs, st.ship))]
             obs: Optional[dict] = {} if observe is not None else None
             out = PL.execute_stage(st, ins, use_kernels, use_order, obs)
+            if st.kind == "limit" and p > 1 and "broadcast" in st.ship:
+                # global WITH-TIES limit: the input was replicated, so every
+                # shard computed the IDENTICAL survivor mask on slot-aligned
+                # batches — deterministic per-slot ownership keeps the shards
+                # disjoint while their union is exactly the one-shard result
+                own = (jnp.arange(out.capacity, dtype=jnp.int32)
+                       % jnp.int32(p)) == jax.lax.axis_index(axis)
+                out = M.MaskedBatch(dict(out.columns), out.valid & own,
+                                    out.order)
             if observe is not None:
                 observe.append(psum_obs(
                     out.valid,

@@ -28,14 +28,10 @@ from __future__ import annotations
 
 from typing import Iterable, Optional
 
-from .operators import (CrossOp, MapOp, MatchOp, Node, ReduceOp, Source,
-                        commute_id, intern_commute_key, replace_child,
+from .operators import (MapOp, Node, ReduceOp, Source, commute_id,
+                        commute_ordered, intern_commute_key, replace_child,
                         struct_id)
-from .reorder import (commute, pull_combiner_from_binary,
-                      pull_unary_from_binary, push_combiner_into_binary,
-                      push_unary_into_binary, reorderable, rotate,
-                      rotate_guard, split_reduce, swap_unary,
-                      unary_reorderable, unsplit_reduce)
+from .reorder import RULES, commute, reorderable
 
 
 class PlanSpaceExceeded(RuntimeError):
@@ -112,6 +108,43 @@ def enum_alternatives_alg1(flow: Node,
 # ---------------------------------------------------------------------------
 # Closure enumerator (trees with binary operators)
 # ---------------------------------------------------------------------------
+def _hint_unary_swap(node: Node, ctx: tuple) -> int:
+    """Commute id of the result of exchanging `node` with its unary child —
+    computable from interned child ids without building the tree."""
+    child = node.children[0]
+    x_cid = commute_id(child.children[0])
+    return intern_commute_key(
+        child.name, (intern_commute_key(node.name, (x_cid,)),))
+
+
+def _hint_rotate(node: Node, ctx: tuple) -> int:
+    """Commute id of the (conjugate) rotation result.  The plain rotation
+    splits off the child's first grandchild when the child sits left
+    (p(a(X,Y),Z) -> a(X, p(Y,Z))) and its second when it sits right
+    (p(X, a(Y,Z)) -> a(p(X,Y), Z)); the conjugate splits off the other."""
+    side, conjugate = ctx
+    child = node.children[side]
+    other_cid = commute_id(node.children[1 - side])
+    g1, g2 = (commute_id(g) for g in child.children)
+    out_cid, in_cid = (g1, g2) if side == 0 else (g2, g1)
+    if conjugate:
+        out_cid, in_cid = in_cid, out_cid
+    return intern_commute_key(child.name, (out_cid, intern_commute_key(
+        node.name, (in_cid, other_cid))))
+
+
+# Per-rule result-id precomputation (DESIGN.md §2 hash-consing fast path).
+# Only rules whose guard is EXACT (sufficient for admissibility, modulo the
+# attrs-preservation check) may appear here: on an intern hit the engine
+# accepts the cached representative without running `apply`.
+_CID_HINTS = {
+    "swap-unary": _hint_unary_swap,
+    "push-limit": _hint_unary_swap,
+    "pull-limit": _hint_unary_swap,
+    "rotate": _hint_rotate,
+}
+
+
 class RewriteEngine:
     """Single-step rewrite lists over COMMUTE CLASSES, memoized per class.
 
@@ -151,85 +184,37 @@ class RewriteEngine:
     def intern(self, node: Node) -> Node:
         return self._reps.setdefault(commute_id(node), node)
 
-    def _emit(self, trees, cids, tree: Optional[Node]):
-        if tree is not None:
-            c = commute_id(tree)
-            trees.append(self._reps.setdefault(c, tree))
-            cids.append(c)
-
-    def _rotations_into(self, node: Node, side: int, trees: list,
-                        cids: list) -> None:
-        """Both conjugate rotation targets of `node` around its binary child
-        at `side` (see class docstring)."""
-        reps = self._reps
-        child = node.children[side]
-        other_cid = commute_id(node.children[1 - side])
-        g1, g2 = (commute_id(g) for g in child.children)
-        # the plain rotation splits off the child's first grandchild when the
-        # child sits left (p(a(X,Y),Z) -> a(X, p(Y,Z))) and its second when
-        # it sits right (p(X, a(Y,Z)) -> a(p(X,Y), Z)); the conjugate splits
-        # off the other one
-        out_cid, in_cid = (g1, g2) if side == 0 else (g2, g1)
-        rot = intern_commute_key(child.name, (out_cid, intern_commute_key(
-            node.name, (in_cid, other_cid))))
-        rep = reps.get(rot)
-        if rep is not None:
-            if rotate_guard(node, side) and rep.attrs() == node.attrs():
-                trees.append(rep)
-                cids.append(rot)
-        else:
-            self._emit(trees, cids, rotate(node, side))
-        # conjugate: commute the child first, so the other grandchild splits
-        rot2 = intern_commute_key(child.name, (in_cid, intern_commute_key(
-            node.name, (out_cid, other_cid))))
-        if rot2 != rot:
-            rep = reps.get(rot2)
-            if rep is not None:
-                if rotate_guard(node, side, conjugate=True) \
-                        and rep.attrs() == node.attrs():
-                    trees.append(rep)
-                    cids.append(rot2)
-            else:
-                self._emit(trees, cids, rotate(node, side, conjugate=True))
-
     def _local_into(self, node: Node, trees: list, cids: list) -> None:
-        is_unary = isinstance(node, (MapOp, ReduceOp))
-        if is_unary:
-            child = node.children[0]
-            if isinstance(child, (MapOp, ReduceOp)):
-                if unary_reorderable(node, child):
-                    x_cid = commute_id(child.children[0])
-                    swapped = intern_commute_key(
-                        child.name,
-                        (intern_commute_key(node.name, (x_cid,)),))
-                    rep = self._reps.get(swapped)
+        """Registry walk: every in-engine rule's (pattern, guard, apply) runs
+        uniformly; rules with a cid hint resolve against the intern table
+        BEFORE building a tree (see `_CID_HINTS`)."""
+        reps = self._reps
+        emitted: set = set()
+        for rule in RULES:
+            if not rule.in_engine or (rule.needs_split and not self._split):
+                continue
+            hint_fn = _CID_HINTS.get(rule.name)
+            for ctx in rule.pattern(node):
+                if not rule.guard(node, ctx):
+                    continue
+                if hint_fn is not None:
+                    hint = hint_fn(node, ctx)
+                    if hint in emitted:
+                        continue  # e.g. self-conjugate rotation
+                    rep = reps.get(hint)
                     if rep is not None:
                         # same attrs-preservation check as _valid(like=node)
                         if rep.attrs() == node.attrs():
                             trees.append(rep)
-                            cids.append(swapped)
-                    else:
-                        self._emit(trees, cids, swap_unary(node, child))
-            elif child.is_binary:
-                for side in (0, 1):
-                    self._emit(trees, cids,
-                               push_unary_into_binary(node, child, side))
-            if self._split and isinstance(node, ReduceOp):
-                self._emit(trees, cids, split_reduce(node))
-                self._emit(trees, cids, unsplit_reduce(node))
-                for side in (0, 1):
-                    self._emit(trees, cids,
-                               push_combiner_into_binary(node, side))
-                    self._emit(trees, cids,
-                               pull_combiner_from_binary(node, side))
-        if node.is_binary:
-            for side in (0, 1):
-                child = node.children[side]
-                if isinstance(child, (MapOp, ReduceOp)):
-                    self._emit(trees, cids,
-                               pull_unary_from_binary(node, side))
-                if isinstance(child, (MatchOp, CrossOp)):
-                    self._rotations_into(node, side, trees, cids)
+                            cids.append(hint)
+                            emitted.add(hint)
+                        continue
+                tree = rule.apply(node, ctx)
+                if tree is not None:
+                    c = commute_id(tree)
+                    trees.append(reps.setdefault(c, tree))
+                    cids.append(c)
+                    emitted.add(c)
 
     def rewrites(self, node: Node) -> tuple[list[Node], list[int]]:
         cid = commute_id(node)
@@ -243,13 +228,15 @@ class RewriteEngine:
         children = node.children
         if children:
             child_cids = tuple(commute_id(c) for c in children)
+            ordered = commute_ordered(node)
             for i, child in enumerate(children):
                 sub_trees, sub_cids = self.rewrites(child)
                 for sub, sub_cid in zip(sub_trees, sub_cids):
                     # id of the substituted tree is known before building it
                     new_cid = intern_commute_key(
                         node.name,
-                        child_cids[:i] + (sub_cid,) + child_cids[i + 1:])
+                        child_cids[:i] + (sub_cid,) + child_cids[i + 1:],
+                        ordered=ordered)
                     rep = reps.get(new_cid)
                     if rep is None:
                         rep = replace_child(node, i, sub)

@@ -18,8 +18,8 @@ from typing import Mapping, Optional
 import numpy as np
 
 from . import invoke
-from .operators import (CoGroupOp, CrossOp, MapOp, MatchOp, Node, ReduceOp,
-                        Source)
+from .operators import (CoGroupOp, CrossOp, LimitOp, MapOp, MatchOp, Node,
+                        ReduceOp, Source)
 from .record import RecordBatch, Schema
 from .udf import DomainSegmentOps
 
@@ -173,10 +173,49 @@ def _exec_pairwise(op, lb: RecordBatch, rb: RecordBatch, li, ri) -> RecordBatch:
 
 def _exec_match(op: MatchOp, left: RecordBatch, right: RecordBatch) -> RecordBatch:
     lb, rb = left.to_numpy().compact(), right.to_numpy().compact()
+    if op.anti:
+        return _exec_match_anti(op, lb, rb)
     if lb.capacity == 0 or rb.capacity == 0:
         return _empty_batch(op.out_schema)
     li, ri = _join_pairs(lb, rb, op.left_key, op.right_key)
     return _exec_pairwise(op, lb, rb, li, ri)
+
+
+def _exec_match_anti(op: MatchOp, lb: RecordBatch, rb: RecordBatch) -> RecordBatch:
+    """Left anti join: left rows with zero key partners on the right.  No UDF
+    runs — survivors are the left records verbatim, in input order."""
+    if lb.capacity == 0:
+        return _empty_batch(op.out_schema)
+    (lc, rc), _ = joint_codes([[lb[k] for k in op.left_key],
+                               [rb[k] for k in op.right_key]])
+    rc_sorted = np.sort(rc)
+    lo = np.searchsorted(rc_sorted, lc, side="left")
+    hi = np.searchsorted(rc_sorted, lc, side="right")
+    keep = (hi - lo) == 0
+    cols = {f: np.asarray(lb[f])[keep] for f in lb.fields}
+    n = int(keep.sum())
+    return RecordBatch(_project_to_schema(cols, op.out_schema, n)) if n \
+        else _empty_batch(op.out_schema)
+
+
+def _exec_limit(op: LimitOp, child: RecordBatch) -> RecordBatch:
+    """WITH-TIES top-k by ascending key: every row whose key is
+    lexicographically <= the k-th smallest — a multiset function of the
+    input, matching the masked executor bit-for-bit."""
+    b = child.to_numpy().compact()
+    n = b.capacity
+    if n == 0:
+        return _empty_batch(op.out_schema)
+    keys = [np.asarray(b[k]) for k in op.key]
+    order = np.lexsort(tuple(reversed(keys)))
+    kth = order[min(op.k, n) - 1]
+    keep = keys[-1] <= keys[-1][kth]
+    for kcol in reversed(keys[:-1]):
+        t = kcol[kth]
+        keep = (kcol < t) | ((kcol == t) & keep)
+    cols = {f: np.asarray(b[f])[keep] for f in b.fields}
+    m = int(keep.sum())
+    return RecordBatch(_project_to_schema(cols, op.out_schema, m))
 
 
 def _exec_cross(op: CrossOp, left: RecordBatch, right: RecordBatch) -> RecordBatch:
@@ -233,6 +272,8 @@ def execute(root: Node, bindings: Mapping[str, RecordBatch]) -> RecordBatch:
             out = _exec_map(node, run(node.child))
         elif isinstance(node, ReduceOp):
             out = _exec_reduce(node, run(node.child))
+        elif isinstance(node, LimitOp):
+            out = _exec_limit(node, run(node.child))
         elif isinstance(node, MatchOp):
             out = _exec_match(node, run(node.left), run(node.right))
         elif isinstance(node, CrossOp):

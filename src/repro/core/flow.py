@@ -11,11 +11,11 @@ from __future__ import annotations
 import itertools
 from typing import Optional, Sequence
 
-from .operators import (CoGroupOp, CrossOp, Hints, MapOp, MatchOp, Node,
-                        ReduceOp, Source)
+from .operators import (CoGroupOp, CrossOp, Hints, LimitOp, MapOp, MatchOp,
+                        Node, ReduceOp, Source)
 from .record import Schema
 from .sca import analyze_udf, infer_add_dtypes
-from .udf import UdfProperties
+from .udf import Card, UdfProperties
 
 _counter = itertools.count()
 
@@ -59,20 +59,44 @@ def _default_join_udf(l, r, out):
     out.emit(l.concat(r))
 
 
+def limit_(child: Node, k: int, key: Sequence[str],
+           name: Optional[str] = None, hints: Hints = Hints()) -> LimitOp:
+    """WITH-TIES top-k of `child` by ascending `key` (lexicographic)."""
+    return LimitOp(name=name if name is not None else f"limit#{next(_counter)}",
+                   k=int(k), key=tuple(key), child=child, hints=hints)
+
+
+def _anti_props() -> UdfProperties:
+    # No UDF runs for an anti join: survivors are left records verbatim.
+    # The drop decision depends on the right input's key multiset, i.e. it
+    # is not record-local — the sentinel filter field keeps satisfies_kgp
+    # False for every key set (same convention as LimitOp's props).
+    return UdfProperties(reads=frozenset(), writes=frozenset(),
+                         adds=frozenset(), drops=frozenset(),
+                         implicit_copy=True, card=Card.AT_MOST_ONE,
+                         filter_fields=frozenset(("__anti_global__",)),
+                         source="builtin")
+
+
 def match(left: Node, right: Node, left_key: Sequence[str],
           right_key: Sequence[str], udf=None, name: Optional[str] = None,
           mode: str = "auto", props: Optional[UdfProperties] = None,
-          hints: Hints = Hints()) -> MatchOp:
+          hints: Hints = Hints(), anti: bool = False) -> MatchOp:
     udf = udf or _default_join_udf
     left_key, right_key = tuple(left_key), tuple(right_key)
-    props = analyze_udf(udf, "match", [left.out_schema, right.out_schema],
-                        left_key=left_key, right_key=right_key, mode=mode,
-                        props=props)
-    add_dtypes = infer_add_dtypes(udf, "match", [left.out_schema, right.out_schema]) \
-        if props.adds else {}
+    if anti:
+        props = props or _anti_props()
+        add_dtypes = {}
+    else:
+        props = analyze_udf(udf, "match", [left.out_schema, right.out_schema],
+                            left_key=left_key, right_key=right_key, mode=mode,
+                            props=props)
+        add_dtypes = infer_add_dtypes(
+            udf, "match", [left.out_schema, right.out_schema]) \
+            if props.adds else {}
     return MatchOp(name=_opname(udf, name), udf=udf, left_key=left_key,
                    right_key=right_key, props=props, left=left, right=right,
-                   hints=hints, add_dtypes=add_dtypes)
+                   hints=hints, add_dtypes=add_dtypes, anti=anti)
 
 
 def cross(left: Node, right: Node, udf=None, name: Optional[str] = None,

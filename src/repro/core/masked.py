@@ -39,8 +39,8 @@ import numpy as np
 
 from . import invoke, scans
 from .cost import estimate
-from .operators import (CoGroupOp, CrossOp, MapOp, MatchOp, Node, ReduceOp,
-                        Source)
+from .operators import (CoGroupOp, CrossOp, LimitOp, MapOp, MatchOp, Node,
+                        ReduceOp, Source)
 from .record import RecordBatch
 from .reorder import eff_writes
 from .udf import JitSegmentOps
@@ -477,6 +477,73 @@ def _exec_match_pk(op: MatchOp, lb: MaskedBatch, rb: MaskedBatch,
     return _concat(parts)
 
 
+def _exec_match_anti(op: MatchOp, lb: MaskedBatch, rb: MaskedBatch,
+                     use_kernels: bool, use_order: bool = True,
+                     obs: Optional[dict] = None) -> MaskedBatch:
+    """Left anti join: keep exactly the LEFT rows whose key has NO valid
+    partner on the right.  No UDF runs; the output is a slot-aligned mask
+    over the left input, so the left side's order survives.  The presence
+    probe is the `_exec_match_pk` sorted search (duplicates on the right are
+    harmless — any valid occurrence of the code marks presence), including
+    the cummax elision when the right side is already key-ordered."""
+    lcode, rcode_raw = _match_codes(op, lb, rb)
+    if use_order and len(op.right_key) == 1 \
+            and tuple(rb.order[:1]) == tuple(op.right_key):
+        lo = (-jnp.inf if jnp.issubdtype(rcode_raw.dtype, jnp.floating)
+              else jnp.iinfo(rcode_raw.dtype).min)
+        rcode = scans.cummax(
+            jnp.where(rb.valid, rcode_raw, jnp.asarray(lo, rcode_raw.dtype)))
+        first_valid = jnp.argmax(rb.valid).astype(jnp.int32)
+        rvalid = rb.valid
+    else:
+        first_valid = None
+        order = jnp.lexsort((~rb.valid, rcode_raw))
+        rcode = rcode_raw[order]
+        rvalid = rb.valid[order]
+    if use_kernels:
+        from ..kernels import ops as kops
+
+        pos = kops.sorted_probe(rcode, lcode)
+    else:
+        pos = jnp.searchsorted(rcode, lcode)
+    if first_valid is not None:
+        pos = jnp.maximum(pos, first_valid)
+    pos = jnp.clip(pos, 0, rb.capacity - 1)
+    present = (rcode[pos] == lcode) & rvalid[pos]
+    keep = lb.valid & ~present
+    if obs is not None:  # observed survivors (adaptive selectivity feedback)
+        obs["groups"] = jnp.sum(keep.astype(jnp.int32))
+    return MaskedBatch(dict(lb.columns), keep, lb.order)
+
+
+def _exec_limit(op: LimitOp, b: MaskedBatch,
+                use_order: bool = True) -> MaskedBatch:
+    """WITH-TIES top-k: keep every valid row whose key is lexicographically
+    <= the k-th smallest valid key.  A deterministic multiset function of the
+    input, so serial/sharded/reordered executions agree bit-identically.
+    The result is a slot-aligned mask — input order survives — and when the
+    input order already covers the key, the threshold row is found with a
+    prefix sum instead of a lexsort (DESIGN.md §8 elision)."""
+    keys = [jnp.asarray(b.columns[k]) for k in op.key]
+    nv = jnp.sum(b.valid.astype(jnp.int32))
+    kth = jnp.clip(jnp.minimum(jnp.int32(op.k), nv) - 1, 0, b.capacity - 1)
+    if use_order and order_covers(b.order, op.key):
+        # valid rows are already key-sorted in slot order: the k-th smallest
+        # key sits at the slot where cumsum(valid) first reaches k
+        cum = scans.cumsum(b.valid.astype(jnp.int32))
+        pos = jnp.clip(jnp.searchsorted(cum, kth + 1), 0, b.capacity - 1)
+    else:
+        perm = jnp.lexsort(tuple(reversed(keys)) + (~b.valid,))
+        pos = perm[kth]
+    # lexicographic key <= threshold key (empty input: valid is all-False
+    # anyway, so the garbage threshold never leaks a row)
+    le = keys[-1] <= keys[-1][pos]
+    for k in reversed(keys[:-1]):
+        t = k[pos]
+        le = (k < t) | ((k == t) & le)
+    return MaskedBatch(dict(b.columns), b.valid & le, b.order)
+
+
 def _exec_cross(op, lb: MaskedBatch, rb: MaskedBatch,
                 left_key=(), right_key=()) -> MaskedBatch:
     """Full pairwise product (also used for small general equi-joins)."""
@@ -607,9 +674,13 @@ def execute_masked(root: Node, bindings: Mapping[str, MaskedBatch],
             out = _exec_map(node, run(node.child))
         elif isinstance(node, ReduceOp):
             out = _exec_reduce(node, run(node.child), use_kernels, use_order)
+        elif isinstance(node, LimitOp):
+            out = _exec_limit(node, run(node.child), use_order)
         elif isinstance(node, MatchOp):
             lb, rb = run(node.left), run(node.right)
-            if node.hints.pk_side == "right":
+            if node.anti:
+                out = _exec_match_anti(node, lb, rb, use_kernels, use_order)
+            elif node.hints.pk_side == "right":
                 out = _exec_match_pk(node, lb, rb, use_kernels, use_order)
             elif node.hints.pk_side == "left":
                 from .reorder import commute as _commute

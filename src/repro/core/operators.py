@@ -60,15 +60,26 @@ def struct_id(node: "Node") -> int:
     return sid
 
 
-def intern_commute_key(name: str, child_cids: tuple) -> int:
+def intern_commute_key(name: str, child_cids: tuple,
+                       ordered: bool = False) -> int:
     """Interned side-order-insensitive id for `name(children...)` given the
-    children's commute ids (sorted here, so caller order is irrelevant)."""
-    key = (name, tuple(sorted(child_cids)))
+    children's commute ids (sorted here, so caller order is irrelevant).
+
+    `ordered=True` keeps the caller's child order — used for operators whose
+    argument order IS semantic (an anti Match preserves only its left side,
+    so its two orientations must never share a commute class)."""
+    key = (name, child_cids if ordered else tuple(sorted(child_cids)))
     cid = _COMMUTE_KEYS.get(key)
     if cid is None:
         cid = len(_COMMUTE_KEYS)
         _COMMUTE_KEYS[key] = cid
     return cid
+
+
+def commute_ordered(node: "Node") -> bool:
+    """Does `node`'s commute id depend on child order?  True only for ops
+    whose semantics are side-asymmetric (anti joins)."""
+    return getattr(node, "anti", False)
 
 
 def commute_id(node: "Node") -> int:
@@ -77,7 +88,8 @@ def commute_id(node: "Node") -> int:
     cid = node.__dict__.get("_cid")
     if cid is None:
         cid = intern_commute_key(
-            node.name, tuple(commute_id(c) for c in node.children))
+            node.name, tuple(commute_id(c) for c in node.children),
+            ordered=commute_ordered(node))
         node.__dict__["_cid"] = cid
     return cid
 
@@ -136,7 +148,8 @@ def combine_binary(parent: "Node", left: "Node",
     references attributes of the new inputs, so validation is skipped.
     Everything else goes through the validating `with_children`."""
     p = parent.props
-    if getattr(p, "implicit_copy", False) and not p.adds and not p.drops:
+    if getattr(p, "implicit_copy", False) and not p.adds and not p.drops \
+            and not getattr(parent, "anti", False):
         ls, rs = left.out_schema, right.out_schema
         new, d = shallow_clone(parent)
         d["left"] = left
@@ -319,6 +332,59 @@ class ReduceOp(Node):
         return dataclasses.replace(self, child=c)
 
 
+_LIMIT_PROPS_CACHE: dict = {}
+
+
+def _limit_props(key: tuple) -> UdfProperties:
+    """Synthesized properties of a WITH-TIES top-k: reads its sort key,
+    writes nothing, emits each input record at most once.  The survival
+    decision is GLOBAL (it depends on the whole input multiset, not the
+    record alone), so `filter_fields` carries a sentinel attribute that can
+    never be covered by a key — `satisfies_kgp` must stay False for every
+    key set even though the cardinality looks like a filter's."""
+    p = _LIMIT_PROPS_CACHE.get(key)
+    if p is None:
+        p = UdfProperties(reads=frozenset(key), writes=frozenset(),
+                          adds=frozenset(), drops=frozenset(),
+                          implicit_copy=True, card=Card.AT_MOST_ONE,
+                          filter_fields=frozenset(("__limit_global__",)),
+                          source="builtin")
+        _LIMIT_PROPS_CACHE[key] = p
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class LimitOp(Node):
+    """WITH-TIES top-k by `key` (ascending, lexicographic): emit every record
+    whose key ranks <= k-th smallest among the input — a deterministic
+    multiset function of the input multiset, independent of physical order,
+    so it commutes freely with plan rewrites below it."""
+
+    name: str
+    k: int
+    key: tuple
+    child: Node
+    hints: Hints = dataclasses.field(default_factory=Hints)
+    props: UdfProperties = None
+    out_schema: Schema = None
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"limit {self.name!r}: k must be >= 1")
+        _check_fields(self.name, self.key, self.child.attrs(), "key")
+        object.__setattr__(self, "out_schema", self.child.out_schema)
+        if self.props is None:
+            object.__setattr__(self, "props", _limit_props(self.key))
+
+    @property
+    def children(self):
+        return (self.child,)
+
+    def with_children(self, *children: Node) -> "LimitOp":
+        (c,) = children
+        return dataclasses.replace(self, child=c, out_schema=None)
+
+
 def _binary_out_schema(name: str, props: UdfProperties, left: Schema, right: Schema,
                        add_dtypes: dict) -> Schema:
     joint = left.union(right)
@@ -336,6 +402,12 @@ class MatchOp(Node):
     right: Node
     hints: Hints = dataclasses.field(default_factory=Hints)
     add_dtypes: dict = dataclasses.field(default_factory=dict)
+    # Anti-join mode: emit exactly the LEFT records that have NO key partner
+    # on the right.  The UDF is never invoked (there is no pair to pass it);
+    # the output schema is the left input's schema, and argument order is
+    # semantic — commute/rotate rewrites are rejected by their guards and the
+    # commute id keeps child order (see `intern_commute_key(ordered=True)`).
+    anti: bool = False
     out_schema: Schema = None
 
     def __post_init__(self):
@@ -343,10 +415,13 @@ class MatchOp(Node):
         _check_fields(self.name, self.right_key, self.right.attrs(), "right key")
         if len(self.left_key) != len(self.right_key):
             raise ValueError(f"match {self.name!r}: key arity mismatch")
-        object.__setattr__(self, "out_schema",
-                           _binary_out_schema(self.name, self.props,
-                                              self.left.out_schema, self.right.out_schema,
-                                              self.add_dtypes))
+        if self.anti:
+            out = self.left.out_schema
+        else:
+            out = _binary_out_schema(self.name, self.props,
+                                     self.left.out_schema,
+                                     self.right.out_schema, self.add_dtypes)
+        object.__setattr__(self, "out_schema", out)
 
     @property
     def children(self):

@@ -47,8 +47,8 @@ from typing import Optional
 
 from .. import hw
 from .cost import Stats, estimate, sort_flops
-from .operators import (CoGroupOp, CrossOp, MapOp, MatchOp, Node, ReduceOp,
-                        Source, struct_id)
+from .operators import (CoGroupOp, CrossOp, LimitOp, MapOp, MatchOp, Node,
+                        ReduceOp, Source, struct_id)
 from .reorder import eff_writes
 
 UDF_VECTOR_FLOPS = 4e12  # VPU-class throughput for record-wise UDF work
@@ -415,6 +415,34 @@ def _expand(node: Node, ctx: Ctx, stats_memo: dict,
                                         props=props, node_cost=mcost,
                                         ship_keys=(pkeys,)))
 
+    elif isinstance(node, LimitOp):
+        # WITH-TIES top-k is a GLOBAL decision: at dop=1 it forwards and
+        # preserves every input property (it writes nothing); at dop>1 the
+        # only sound strategy broadcasts the input so every shard computes
+        # the identical threshold, then keeps its owned slots — partitioning
+        # and sort do not survive the replicate (DESIGN.md §13).
+        cin = estimate(node.child, stats_memo, ctx.dop)
+        kset = frozenset(node.key)
+        if ctx.dop <= 1:
+            for iprops, iplan in child_cands[0].items():
+                covered = iprops.sorted_on(kset)
+                cpu = 0.0 if covered else sort_flops(cin.rows)
+                cost = CostVec(mem=_t_mem(cin.bytes, st.bytes, ctx),
+                               cpu=_t_cpu(cpu, ctx))
+                out.append(PhysPlan(
+                    node=node, inputs=(iplan,), ship=("forward",),
+                    local="reuse-sort" if covered else "sort",
+                    props=_preserved(iprops, node), node_cost=cost))
+        else:
+            cheap = min(child_cands[0].values(),
+                        key=lambda p: p.total_cost.total)
+            cost = CostVec(net=_t_broadcast(cin.bytes, ctx),
+                           mem=_t_mem(cin.bytes * ctx.dop, st.bytes, ctx),
+                           cpu=_t_cpu(sort_flops(cin.rows) * ctx.dop, ctx))
+            out.append(PhysPlan(node=node, inputs=(cheap,),
+                                ship=("broadcast",), local="sort",
+                                props=Props(), node_cost=cost))
+
     elif isinstance(node, (MatchOp, CrossOp)):
         ls = estimate(node.left, stats_memo, ctx.dop)
         rs = estimate(node.right, stats_memo, ctx.dop)
@@ -440,14 +468,23 @@ def _expand(node: Node, ctx: Ctx, stats_memo: dict,
                 if not rsorted:
                     cpu += sort_flops(rs.rows / ctx.dop) * ctx.dop
                 local = "reuse-sort" if (lsorted and rsorted) else "sort-merge"
-                out_sort = []
-                for k in node.left_key:
-                    if k not in node.attrs():
-                        break
-                    out_sort.append(k)
-                props = Props(partitions=frozenset(g for g in (lk, rk)
-                                                   if g <= node.attrs()),
-                              sort=tuple(out_sort))
+                if node.anti:
+                    # anti is a filter on the left stream: survivors keep the
+                    # left side's arrival order (slot-aligned mask), and only
+                    # left-key co-location survives (output has no right rows)
+                    props = Props(
+                        partitions=frozenset(g for g in (lk,)
+                                             if g <= node.attrs()),
+                        sort=lp.sort if lship == "forward" else ())
+                else:
+                    out_sort = []
+                    for k in node.left_key:
+                        if k not in node.attrs():
+                            break
+                        out_sort.append(k)
+                    props = Props(partitions=frozenset(g for g in (lk, rk)
+                                                       if g <= node.attrs()),
+                                  sort=tuple(out_sort))
                 cost = CostVec(net=net,
                                mem=_t_mem(ls.bytes + rs.bytes, st.bytes, ctx),
                                cpu=_t_cpu(cpu, ctx))
@@ -467,6 +504,11 @@ def _expand(node: Node, ctx: Ctx, stats_memo: dict,
         cheap_l = min(lcands.values(), key=lambda p: p.total_cost.total)
         cheap_r = min(rcands.values(), key=lambda p: p.total_cost.total)
         for bc_side in (0, 1):
+            # anti: only broadcast-RIGHT is sound — a replicated LEFT row
+            # would be judged against each shard's partial right multiset
+            # (and kept once per shard that lacks its partner)
+            if bc_side == 0 and is_match and node.anti:
+                continue
             bst, fst = (rs, ls) if bc_side == 1 else (ls, rs)
             net = _t_broadcast(bst.bytes, ctx)
             probe_rows = fst.rows / ctx.dop
@@ -602,6 +644,13 @@ def cost_lower_bound(node: Node, ctx: Ctx, stats_memo: dict,
         lb = cost_lower_bound(node.child, ctx, stats_memo, bound_memo) \
             + net + _t_mem(cin.bytes, st.bytes, ctx) \
             + _t_cpu(cin.rows * node.hints.cpu_flops_per_record, ctx)
+    elif isinstance(node, LimitOp):
+        cin = estimate(node.child, stats_memo, ctx.dop)
+        # at dop>1 every physical alternative broadcasts (global threshold);
+        # sort work is excluded — an order-covered plan never pays it
+        net = _t_broadcast(cin.bytes, ctx) if ctx.dop > 1 else 0.0
+        lb = cost_lower_bound(node.child, ctx, stats_memo, bound_memo) \
+            + net + _t_mem(cin.bytes, st.bytes, ctx)
     elif isinstance(node, (MatchOp, CrossOp, CoGroupOp)):
         ls = estimate(node.children[0], stats_memo, ctx.dop)
         rs = estimate(node.children[1], stats_memo, ctx.dop)

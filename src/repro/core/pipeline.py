@@ -95,8 +95,8 @@ import numpy as np
 
 from . import masked as M
 from .cost import StatsStore, calibrate_hints, drift_score, seed_source_stats
-from .operators import (CoGroupOp, CrossOp, MapOp, MatchOp, Node, ReduceOp,
-                        Source)
+from .operators import (CoGroupOp, CrossOp, LimitOp, MapOp, MatchOp, Node,
+                        ReduceOp, Source)
 from .physical import PhysPlan
 from .record import RecordBatch
 from .reorder import eff_writes
@@ -230,17 +230,25 @@ def semantic_key(node: Node, _memo: Optional[dict] = None) -> tuple:
                node.combiner, node.props.combine,
                _hints_fingerprint(node.hints, None),
                semantic_key(node.child, _memo))
+    elif isinstance(node, LimitOp):
+        out = ("limit", node.name, node.k, node.key,
+               _hints_fingerprint(node.hints, None),
+               semantic_key(node.child, _memo))
     elif isinstance(node, (MatchOp, CrossOp, CoGroupOp)):
         lsem = semantic_key(node.left, _memo)
         rsem = semantic_key(node.right, _memo)
         lk = getattr(node, "left_key", ())
         rk = getattr(node, "right_key", ())
+        anti = getattr(node, "anti", False)
         # key=repr: fingerprints mix bytes/str/None, which plain tuple
-        # comparison cannot order (repr of nested tuples is deterministic)
-        sides = tuple(sorted(((lsem, lk), (rsem, rk)), key=repr))
+        # comparison cannot order (repr of nested tuples is deterministic).
+        # Anti joins keep the sides ORDERED: argument order is semantic
+        # (only left survives), so anti(X,Y) must never alias anti(Y,X).
+        sides = ((lsem, lk), (rsem, rk)) if anti \
+            else tuple(sorted(((lsem, lk), (rsem, rk)), key=repr))
         pk_sem = {"left": lsem, "right": rsem}.get(node.hints.pk_side)
         out = (type(node).__name__, node.name, _udf_fingerprint(node.udf),
-               sides, _hints_fingerprint(node.hints, pk_sem))
+               sides, _hints_fingerprint(node.hints, pk_sem), anti)
     else:
         raise TypeError(type(node).__name__)
     _memo[id(node)] = out
@@ -287,7 +295,7 @@ class Stage:
 
 
 _KIND = {ReduceOp: "reduce", MatchOp: "match", CrossOp: "cross",
-         CoGroupOp: "cogroup"}
+         CoGroupOp: "cogroup", LimitOp: "limit"}
 
 # emission classes whose masked execution yields a single slot-aligned part
 _SINGLE_RAT = (Card.ONE, Card.AT_MOST_ONE)
@@ -324,7 +332,13 @@ def _stage_out_order(kind: str, node: Node, in_orders: tuple,
         elif emit not in _RECORD_EMITS:
             return ()
         return M.order_prefix(base, node.out_schema.fields, eff_writes(node))
+    if kind == "limit":
+        # a slot-aligned mask on the input: whatever order arrived survives
+        return M.order_prefix(in_orders[0], node.out_schema.fields)
     if kind == "match":
+        if node.anti:
+            # survivors are left rows in left arrival order (writes nothing)
+            return M.order_prefix(in_orders[0], node.out_schema.fields)
         side = {"right": 0, "left": 1}.get(node.hints.pk_side)
         if side is None or node.props.card not in _SINGLE_RAT:
             return ()
@@ -531,8 +545,15 @@ def execute_stage(stage: Stage, ins: Sequence[M.MaskedBatch],
     if stage.kind == "reduce":
         return M._exec_reduce(node, ins[0], use_kernels, use_order, obs,
                               contiguous=contiguous_in)
+    if stage.kind == "limit":
+        return M._exec_limit(node, ins[0], use_order)
     if stage.kind == "match":
         lb, rb = ins
+        if node.anti:
+            # checked before pk_side: commute() refuses anti nodes, and the
+            # sides must not swap anyway (only left survives)
+            return M._exec_match_anti(node, lb, rb, use_kernels, use_order,
+                                      obs)
         if node.hints.pk_side == "right":
             return M._exec_match_pk(node, lb, rb, use_kernels, use_order, obs)
         if node.hints.pk_side == "left":

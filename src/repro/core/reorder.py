@@ -34,9 +34,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from .operators import (CoGroupOp, CrossOp, MapOp, MatchOp, Node, ReduceOp,
-                        Source, combine_binary, rebuild, replace_child,
-                        shallow_clone)
+from .operators import (CoGroupOp, CrossOp, LimitOp, MapOp, MatchOp, Node,
+                        ReduceOp, Source, combine_binary, rebuild,
+                        replace_child, shallow_clone)
 from .udf import Card, KatEmit, UdfProperties
 
 
@@ -44,7 +44,7 @@ from .udf import Card, KatEmit, UdfProperties
 # Effective read/write sets
 # ---------------------------------------------------------------------------
 def node_keys(node: Node) -> frozenset:
-    if isinstance(node, ReduceOp):
+    if isinstance(node, (ReduceOp, LimitOp)):
         return frozenset(node.key)
     if isinstance(node, (MatchOp, CoGroupOp)):
         return frozenset(node.left_key) | frozenset(node.right_key)
@@ -199,6 +199,26 @@ def _push_conditions(u: Node, b: Node, side: int) -> bool:
         return False
     # ROC with the binary operator's conceptual f' (keys are reads).
     if not roc(u, b):
+        return False
+
+    if getattr(b, "anti", False):
+        # Anti join: only its LEFT input survives, so a unary moves below the
+        # preserved side only — below the right (probe) side it would alter
+        # which keys exist rather than which records survive.
+        if side != 0:
+            return False
+        if isinstance(u, MapOp):
+            # RAT over the preserved side: the per-record UDF commutes with
+            # the per-record "no partner" predicate (ROC already excludes key
+            # writes, since the anti's keys are effective reads).
+            return True
+        if isinstance(u, ReduceOp):
+            # Invariant grouping without the PK requirement: when the Reduce
+            # key refines the anti key, each group carries ONE key value, so
+            # the anti keeps or drops whole groups — and unlike a join, the
+            # anti never duplicates records, so no uniqueness is needed on
+            # the other side.
+            return frozenset(b.left_key) <= frozenset(u.key)
         return False
 
     if isinstance(u, MapOp):
@@ -522,6 +542,8 @@ def commute(b: Node) -> Optional[Node]:
     """Swap the two inputs of a Match/Cross/CoGroup (schema is name-based)."""
     if not _is_binary_op(b):
         return None
+    if getattr(b, "anti", False):
+        return None  # side order is semantic: only the left input survives
     # manual clone: argument order is schema-irrelevant (name-based attrs),
     # so the resolved out_schema carries over and no re-validation is needed
     new, d = shallow_clone(b)
@@ -549,6 +571,8 @@ def rotate_guard(parent: Node, side: int, conjugate: bool = False) -> bool:
     child = parent.children[side]
     if not isinstance(child, (MatchOp, CrossOp)):
         return False
+    if getattr(parent, "anti", False) or getattr(child, "anti", False):
+        return False  # anti joins are not associative with other joins
     if parent.props.schema_dependent or child.props.schema_dependent:
         return False  # rotations change both operators' input schemas
     if not roc(parent, child):
@@ -601,6 +625,55 @@ def rotate(parent: Node, side: int, conjugate: bool = False) -> Optional[Node]:
 
 
 # ---------------------------------------------------------------------------
+# Limit pushdown (WITH-TIES top-k through 1:1 key-preserving stages)
+# ---------------------------------------------------------------------------
+def limit_map_commutes(lim: Node, m: Node) -> bool:
+    """Can a WITH-TIES `LimitOp` and a `MapOp` be exchanged (either way)?
+
+    The limit is a deterministic multiset function of (key multiset, k), so
+    it commutes with any stage whose record mapping is a bijection (|f(r)|=1)
+    that leaves the key VALUES untouched.  `eff_writes` covers both mutation
+    and projection of the key, so a map that drops or rewrites the key — or
+    created it in the first place — blocks the move.  This is the general
+    form of the order-cover guard: a propagated sort order covering the
+    limit's key survives only stages that never write those columns, so
+    "out-order covers the key and the map is 1:1" implies this condition
+    (the converse enables pushdown below maps over unsorted inputs too)."""
+    if not (isinstance(lim, LimitOp) and isinstance(m, MapOp)):
+        return False
+    if m.props.card is not Card.ONE:
+        return False
+    return not (eff_writes(m) & frozenset(lim.key))
+
+
+def push_limit(lim: Node) -> Optional[Node]:
+    """`limit(map(X))` → `map(limit(X))` — the pushdown direction: downstream
+    of the limit, the map now touches at most k-ish records."""
+    if not isinstance(lim, LimitOp):
+        return None
+    m = lim.children[0]
+    if not limit_map_commutes(lim, m):
+        return None
+    inner = replace_child(lim, 0, m.children[0])
+    if inner is None:
+        return None
+    return _valid(replace_child(m, 0, inner), like=lim)
+
+
+def pull_limit(m: Node) -> Optional[Node]:
+    """`map(limit(X))` → `limit(map(X))` — inverse, for closure symmetry."""
+    if not isinstance(m, MapOp):
+        return None
+    lim = m.children[0]
+    if not (isinstance(lim, LimitOp) and limit_map_commutes(lim, m)):
+        return None
+    inner = replace_child(m, 0, lim.children[0])
+    if inner is None:
+        return None
+    return _valid(replace_child(lim, 0, inner), like=m)
+
+
+# ---------------------------------------------------------------------------
 # reorderable() — the predicate used by Algorithm 1 (unary chains)
 # ---------------------------------------------------------------------------
 def reorderable(r: Node, s: Node) -> bool:
@@ -609,42 +682,187 @@ def reorderable(r: Node, s: Node) -> bool:
 
 
 # ---------------------------------------------------------------------------
-# All single-step rewrites of a tree (used by the closure enumerator)
+# Declarative rule registry (DESIGN.md §13)
+#
+# Every rewrite is a `Rule(name, pattern, guard, apply)` over hash-consed
+# nodes:
+#
+# * `pattern(node)` yields context tuples — one per structural position the
+#   rule could fire at (sides, conjugate flags).  Pure shape matching, no
+#   property checks.
+# * `guard(node, ctx)` decides admissibility from operator properties alone.
+#   For hint-accelerated rules (see enumeration._CID_HINTS) the guard is
+#   EXACT up to the attrs-preservation check; elsewhere it may be a cheap
+#   necessary filter with `apply` holding the full conditions.
+# * `apply(node, ctx)` builds the rewritten tree or returns None.
+#
+# `local_rewrites` and the memoized RewriteEngine both walk this registry, so
+# a new operator plugs into enumeration, search, and the differential harness
+# by registering rules here.  `in_engine=False` marks rules the commute-class
+# engine must skip (it explores side-order-insensitive classes, so commute is
+# an orbit materialization, not a class edge).
 # ---------------------------------------------------------------------------
-def local_rewrites(node: Node, split_reduces: bool = True) -> list[Node]:
-    """Every tree reachable from `node` by ONE valid rewrite at the root."""
-    out: list[Node] = []
-    if _is_unary_op(node):
-        child = node.children[0]
-        if _is_unary_op(child):
-            t = swap_unary(node, child)
-            if t is not None:
-                out.append(t)
-        if _is_binary_op(child):
-            for side in (0, 1):
-                t = push_unary_into_binary(node, child, side)
-                if t is not None:
-                    out.append(t)
-        if split_reduces and isinstance(node, ReduceOp):
-            for t in (split_reduce(node), unsplit_reduce(node)):
-                if t is not None:
-                    out.append(t)
-            for side in (0, 1):
-                for t in (push_combiner_into_binary(node, side),
-                          pull_combiner_from_binary(node, side)):
-                    if t is not None:
-                        out.append(t)
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    name: str
+    pattern: object   # Node -> Iterable[tuple]
+    guard: object     # (Node, ctx) -> bool
+    apply: object     # (Node, ctx) -> Optional[Node]
+    needs_split: bool = False   # only explored when split_reduces is on
+    in_engine: bool = True      # walked by RewriteEngine._local_into
+
+
+def _pat_swap_unary(node):
+    if _is_unary_op(node) and _is_unary_op(node.children[0]):
+        yield ()
+
+
+def _pat_push_unary(node):
+    if _is_unary_op(node) and _is_binary_op(node.children[0]):
+        yield (0,)
+        yield (1,)
+
+
+def _pat_reduce_root(node):
+    if isinstance(node, ReduceOp):
+        yield ()
+
+
+def _pat_reduce_sides(node):
+    if isinstance(node, ReduceOp):
+        yield (0,)
+        yield (1,)
+
+
+def _pat_pull_unary(node):
     if _is_binary_op(node):
         for side in (0, 1):
             if _is_unary_op(node.children[side]):
-                t = pull_unary_from_binary(node, side)
-                if t is not None:
-                    out.append(t)
+                yield (side,)
+
+
+def _pat_rotate(node):
+    if isinstance(node, (MatchOp, CrossOp)):
+        for side in (0, 1):
             if isinstance(node.children[side], (MatchOp, CrossOp)):
-                t = rotate(node, side)
-                if t is not None:
-                    out.append(t)
-        t = commute(node)
-        if t is not None:
-            out.append(t)
+                yield (side, False)
+                yield (side, True)
+
+
+def _pat_commute(node):
+    if _is_binary_op(node):
+        yield ()
+
+
+def _pat_push_limit(node):
+    if isinstance(node, LimitOp) and isinstance(node.children[0], MapOp):
+        yield ()
+
+
+def _pat_pull_limit(node):
+    if isinstance(node, MapOp) and isinstance(node.children[0], LimitOp):
+        yield ()
+
+
+def _grd_push_unary(node, ctx):
+    u = node
+    if isinstance(u, ReduceOp):
+        u = _strip_reduce_extension(u, node.children[0].children[1 - ctx[0]].attrs())
+    return _push_conditions(u, node.children[0], ctx[0])
+
+
+def _grd_split(node, ctx):
+    return (not node.combiner
+            and getattr(node.udf, "__combine_merge__", None) is None
+            and node.props.combine is not None
+            and not node.props.schema_dependent)
+
+
+def _grd_unsplit(node, ctx):
+    info = getattr(node.udf, "__combine_split__", None)
+    pre = node.children[0]
+    return (info is not None and isinstance(pre, ReduceOp) and pre.combiner
+            and pre.key == node.key)
+
+
+def _grd_push_combiner(node, ctx):
+    if getattr(node.udf, "__combine_split__", None) is None:
+        return False
+    pre = node.children[0]
+    return (isinstance(pre, ReduceOp) and pre.combiner
+            and isinstance(pre.children[0], MatchOp))
+
+
+def _grd_pull_combiner(node, ctx):
+    if getattr(node.udf, "__combine_split__", None) is None:
+        return False
+    b = node.children[0]
+    if not isinstance(b, MatchOp):
+        return False
+    pre = b.children[ctx[0]]
+    return isinstance(pre, ReduceOp) and pre.combiner and pre.key == node.key
+
+
+RULES: list[Rule] = [
+    Rule("swap-unary", _pat_swap_unary,
+         lambda n, c: unary_reorderable(n, n.children[0]),
+         lambda n, c: swap_unary(n, n.children[0])),
+    Rule("push-unary", _pat_push_unary, _grd_push_unary,
+         lambda n, c: push_unary_into_binary(n, n.children[0], c[0])),
+    Rule("split-reduce", _pat_reduce_root, _grd_split,
+         lambda n, c: split_reduce(n), needs_split=True),
+    Rule("unsplit-reduce", _pat_reduce_root, _grd_unsplit,
+         lambda n, c: unsplit_reduce(n), needs_split=True),
+    Rule("push-combiner", _pat_reduce_sides, _grd_push_combiner,
+         lambda n, c: push_combiner_into_binary(n, c[0]), needs_split=True),
+    Rule("pull-combiner", _pat_reduce_sides, _grd_pull_combiner,
+         lambda n, c: pull_combiner_from_binary(n, c[0]), needs_split=True),
+    Rule("pull-unary", _pat_pull_unary,
+         lambda n, c: not (getattr(n, "anti", False) and c[0] == 1),
+         lambda n, c: pull_unary_from_binary(n, c[0])),
+    Rule("rotate", _pat_rotate,
+         lambda n, c: rotate_guard(n, c[0], conjugate=c[1]),
+         lambda n, c: rotate(n, c[0], conjugate=c[1])),
+    Rule("commute", _pat_commute,
+         lambda n, c: not getattr(n, "anti", False),
+         lambda n, c: commute(n), in_engine=False),
+    Rule("push-limit", _pat_push_limit,
+         lambda n, c: limit_map_commutes(n, n.children[0]),
+         lambda n, c: push_limit(n)),
+    Rule("pull-limit", _pat_pull_limit,
+         lambda n, c: limit_map_commutes(n.children[0], n),
+         lambda n, c: pull_limit(n)),
+]
+
+RULES_BY_NAME: dict[str, Rule] = {r.name: r for r in RULES}
+
+
+def register_rule(rule: Rule, before: Optional[str] = None) -> None:
+    """Add a rewrite rule to the registry (idempotent on name collision is an
+    error — rules are identities, not handlers)."""
+    if rule.name in RULES_BY_NAME:
+        raise ValueError(f"rewrite rule {rule.name!r} already registered")
+    idx = len(RULES)
+    if before is not None:
+        idx = next(i for i, r in enumerate(RULES) if r.name == before)
+    RULES.insert(idx, rule)
+    RULES_BY_NAME[rule.name] = rule
+
+
+# ---------------------------------------------------------------------------
+# All single-step rewrites of a tree (used by the closure enumerator)
+# ---------------------------------------------------------------------------
+def local_rewrites(node: Node, split_reduces: bool = True) -> list[Node]:
+    """Every tree reachable from `node` by ONE valid rewrite at the root —
+    a pure walk of the rule registry."""
+    out: list[Node] = []
+    for rule in RULES:
+        if rule.needs_split and not split_reduces:
+            continue
+        for ctx in rule.pattern(node):
+            if not rule.guard(node, ctx):
+                continue
+            t = rule.apply(node, ctx)
+            if t is not None:
+                out.append(t)
     return out

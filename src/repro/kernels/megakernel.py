@@ -85,9 +85,11 @@ def _stage_fusable(st) -> bool:
     if st.kind in ("chain", "reduce"):
         return True
     if st.kind == "match":
-        # a hint-less Match executes as a cross product — not fusable
-        return st.top.hints.pk_side in ("left", "right")
-    return False  # cross / cogroup: legacy sides stay composed
+        # a hint-less Match executes as a cross product — not fusable; an
+        # anti Match has its own executor the span body does not route
+        return not st.top.anti \
+            and st.top.hints.pk_side in ("left", "right")
+    return False  # cross / cogroup / limit: stay composed
 
 
 def _input_nodes(st) -> tuple:

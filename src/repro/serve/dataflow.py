@@ -57,6 +57,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import threading
 import time
 from typing import Mapping, Optional, Sequence
@@ -67,8 +68,8 @@ from ..core import flow as F
 from ..core.cost import (StatsStore, calibrate_hints, drift_score,
                          pool_stores)
 from ..core.enumeration import PlanSpaceExceeded
-from ..core.operators import (CoGroupOp, CrossOp, MapOp, MatchOp, Node,
-                              ReduceOp, Source)
+from ..core.operators import (CoGroupOp, CrossOp, LimitOp, MapOp, MatchOp,
+                              Node, ReduceOp, Source)
 from ..core.optimizer import optimize
 from ..core.pipeline import (CompiledPlan, ExecutableCache, _Interned,
                              compile_plan, semantic_key)
@@ -154,14 +155,29 @@ def coalesce_flow(root: Node, width: int,
             child, t = rebuild(n.child)
             out = F.reduce_(child, (t,) + tuple(n.key), n.udf,
                             name=n.name, hints=scale(n.hints))
-        elif isinstance(n, (MatchOp, CoGroupOp)):
+        elif isinstance(n, MatchOp):
             left, lt = rebuild(n.left)
             right, rt = rebuild(n.right)
-            ctor = F.match if isinstance(n, MatchOp) else F.cogroup
-            out = ctor(left, right, (lt,) + tuple(n.left_key),
-                       (rt,) + tuple(n.right_key),
-                       udf=n.udf, name=n.name, hints=scale(n.hints))
+            # anti coalesces soundly: with both tags prepended a left row
+            # survives iff no right row shares its (tag, key) — i.e. each
+            # request's own anti join, never a cross-request partner
+            out = F.match(left, right, (lt,) + tuple(n.left_key),
+                          (rt,) + tuple(n.right_key),
+                          udf=n.udf, name=n.name, hints=scale(n.hints),
+                          anti=n.anti)
             t = lt if lt in out.out_schema else rt
+        elif isinstance(n, CoGroupOp):
+            left, lt = rebuild(n.left)
+            right, rt = rebuild(n.right)
+            out = F.cogroup(left, right, (lt,) + tuple(n.left_key),
+                            (rt,) + tuple(n.right_key),
+                            udf=n.udf, name=n.name, hints=scale(n.hints))
+            t = lt if lt in out.out_schema else rt
+        elif isinstance(n, LimitOp):
+            # a limit is a GLOBAL top-k: prepending the tag to its sort key
+            # would rank requests by ordinal, and keeping it un-tagged would
+            # let one request's rows crowd out another's — not coalescable
+            raise _NotCoalescable(f"{n.name!r} is a Limit")
         elif isinstance(n, CrossOp):
             raise _NotCoalescable(f"{n.name!r} is a Cross")
         else:
@@ -217,6 +233,88 @@ def split_result(batch: RecordBatch, n_requests: int,
 
 
 # ---------------------------------------------------------------------------
+# Cross-tenant common-subplan sharing (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+SUBPLAN_SHARING_ENV = "REPRO_SUBPLAN_SHARING"
+
+
+def _subplan_sharing_default() -> bool:
+    return os.environ.get(SUBPLAN_SHARING_ENV, "1").lower() \
+        not in ("0", "false", "off")
+
+
+@dataclasses.dataclass(frozen=True)
+class SharedPrefix:
+    """One flow's shareable upstream: the maximal Source → Map-chain
+    `prefix` (every link a single-consumer MapOp — filters and 1:1
+    transforms), the `source` it reads, and the `suffix` flow with the
+    prefix subtree replaced by a stub Source over the prefix's output
+    schema.  At serve time the stub binds — under the ORIGINAL source's
+    name — to the fused prefix execution's output batch."""
+
+    prefix: Node
+    source: str
+    suffix: Node
+
+
+def shared_prefix(flow: Node) -> Optional[SharedPrefix]:
+    """Extract `flow`'s shareable prefix, or None when there is nothing
+    worth sharing (no Map directly above a source, a fan-out below the
+    first non-Map, or a flow that IS a bare map chain — then there is no
+    per-tenant suffix left and solo/coalesced serving already covers it).
+
+    The chain stops at the first operator that is not a single-consumer
+    MapOp: Reduces and joins change cardinality per tenant-specific keys,
+    and a fan-out means the subtree is not a chain.  Among multiple
+    sources the LONGEST chain wins — more fused work per shared batch."""
+    parents: dict[int, list] = {}
+    seen: set[int] = set()
+    for n in flow.iter_nodes():
+        if id(n) in seen:
+            continue
+        seen.add(id(n))
+        for c in n.children:
+            parents.setdefault(id(c), []).append(n)
+    best = None
+    for n in flow.iter_nodes():
+        if not isinstance(n, Source):
+            continue
+        cur, chain = n, []
+        while True:
+            ps = parents.get(id(cur), [])
+            if len(ps) != 1 or not isinstance(ps[0], MapOp):
+                break
+            cur = ps[0]
+            chain.append(cur)
+        if chain and (best is None or len(chain) > len(best[1])):
+            best = (n, chain)
+    if best is None:
+        return None
+    src, chain = best
+    prefix = chain[-1]
+    if prefix is flow:
+        return None
+    stub = F.source(src.name, prefix.out_schema,
+                    num_records=src.num_records)
+    memo: dict[int, Node] = {}
+
+    def rebuild(n: Node) -> Node:
+        if n is prefix:
+            return stub
+        hit = memo.get(id(n))
+        if hit is not None:
+            return hit
+        kids = tuple(rebuild(c) for c in n.children)
+        out = n if all(k is c for k, c in zip(kids, n.children)) \
+            else n.with_children(*kids)
+        memo[id(n)] = out
+        return out
+
+    return SharedPrefix(prefix=prefix, source=src.name,
+                        suffix=rebuild(flow))
+
+
+# ---------------------------------------------------------------------------
 # Engine configuration and request handle
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
@@ -236,7 +334,10 @@ class ServeConfig:
     re-hittable cache identity.  `async_swap` prepares drift-triggered
     regime swaps (optimize + compile + pre-trace) on a background thread so
     the pump never stalls; disable for single-threaded determinism in
-    tests."""
+    tests.  `share_subplans` enables cross-tenant common-subplan sharing
+    (tenants in different plan groups whose flows open with the same
+    source → map-chain prefix execute it fused once per batch); defaults
+    from the `REPRO_SUBPLAN_SHARING` kill switch (`=0` disables)."""
 
     max_coalesce: int = 16
     probe_every: int = 16
@@ -250,6 +351,8 @@ class ServeConfig:
     use_kernels: bool = False
     use_order: bool = True
     async_swap: bool = True
+    share_subplans: bool = dataclasses.field(
+        default_factory=_subplan_sharing_default)
 
 
 class ServeRequest:
@@ -306,6 +409,8 @@ class _Tenant:
     swaps: int = 0
     sample: object = None     # last probe's bindings (pre-traces new regimes)
     pending: object = None    # in-flight background swap (threading.Thread)
+    prefix_key: object = None   # share-group key (None: nothing shareable)
+    suffix_plan: object = None  # CompiledPlan of the flow minus its prefix
 
 
 @dataclasses.dataclass
@@ -327,6 +432,23 @@ class _PlanGroup:
     repairs: int = 0
 
 
+@dataclasses.dataclass
+class _SharedGroup:
+    """Serving state of one shared subplan prefix (one commute-invariant
+    `semantic_key` of the prefix subtree): the fused prefix's compiled
+    plan, the store its boundary observations are attributed to — ONCE per
+    fused execution, never once per consuming tenant, so no member's
+    private `StatsStore` ever double-counts the shared stage — and the
+    member tenants whose flows open with this prefix."""
+
+    key: object
+    plan: CompiledPlan
+    source: str               # the source the prefix reads (= stub binding)
+    store: StatsStore         # fused-prefix obs, attributed exactly once
+    members: set = dataclasses.field(default_factory=set)
+    batches: int = 0
+
+
 # ---------------------------------------------------------------------------
 # The engine
 # ---------------------------------------------------------------------------
@@ -345,6 +467,7 @@ class DataflowEngine:
         self.cache = cache if cache is not None else ExecutableCache()
         self._tenants: dict[str, _Tenant] = {}
         self._groups: dict[object, _PlanGroup] = {}
+        self._prefixes: dict[object, _SharedGroup] = {}
         self._lock = threading.Lock()
         self._pump_lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
@@ -354,6 +477,8 @@ class DataflowEngine:
         self.device_batches = 0
         self.coalesced_requests = 0
         self.solo_requests = 0
+        self.shared_requests = 0
+        self.shared_prefix_batches = 0
         self.truncations = 0
 
     # -- registration --------------------------------------------------------
@@ -378,6 +503,48 @@ class DataflowEngine:
                         group_key=g.key, regime_tick=store.clock)
             g.members.add(tenant)
             self._tenants[tenant] = t
+        self._link_prefix(t)
+
+    def _link_prefix(self, t: _Tenant) -> None:
+        """Detect `t`'s shareable (source → map-chain) prefix and join — or
+        create — its share group: tenants whose flows open with a
+        semantically identical prefix execute it fused (`_pump_shared`).
+        The share key is the commute-invariant `semantic_key` of the prefix
+        subtree, so it tracks the tenant's hint regime: a recalibrated
+        tenant re-links under its NEW prefix key, leaving its old share
+        group instead of dragging co-sharers onto its regime.  The
+        expensive builds (prefix plan once per share group, suffix plan per
+        tenant) run unlocked; insertion is first-wins."""
+        cfg = self.config
+        if not cfg.share_subplans:
+            return
+        sp = shared_prefix(t.flow)
+        if sp is None:
+            return
+        key = _Interned(semantic_key(sp.prefix))
+        with self._lock:
+            sg = self._prefixes.get(key)
+        if sg is None:
+            plan = compile_plan(self._plan_for(sp.prefix), cache=self.cache,
+                                use_kernels=cfg.use_kernels,
+                                use_order=cfg.use_order)
+            sg = _SharedGroup(key=key, plan=plan, source=sp.source,
+                              store=StatsStore())
+            with self._lock:
+                sg = self._prefixes.setdefault(key, sg)
+        suffix = compile_plan(self._plan_for(sp.suffix), cache=self.cache,
+                              use_kernels=cfg.use_kernels,
+                              use_order=cfg.use_order)
+        with self._lock:
+            sg.members.add(t.name)
+            t.prefix_key, t.suffix_plan = key, suffix
+
+    def _unlink_prefix(self, t: _Tenant) -> None:
+        with self._lock:
+            sg = self._prefixes.get(t.prefix_key)
+            if sg is not None:
+                sg.members.discard(t.name)
+            t.prefix_key = t.suffix_plan = None
 
     def _plan_for(self, flow: Node):
         """Best physical plan (shipping + order Props thread into the
@@ -440,6 +607,7 @@ class DataflowEngine:
         starves behind a deep co-queue."""
         served = batches = 0
         with self._pump_lock:
+            served += self._pump_shared()
             while max_batches is None or batches < max_batches:
                 progressed = False
                 for g in list(self._groups.values()):
@@ -488,6 +656,120 @@ class DataflowEngine:
         self._stop.set()
         self._thread.join()
         self._thread = None
+
+    # -- the shared-subplan path ---------------------------------------------
+    def _pump_shared(self) -> int:
+        """Cross-group sweep ahead of the per-group one: queued requests
+        whose tenants share a prefix group spanning ≥2 plan groups AND bind
+        the IDENTICAL source batch (same `RecordBatch` object — the
+        pairing fingerprint) are extracted and served through one fused
+        prefix execution feeding each tenant's own suffix plan.  Everything
+        else stays queued for the normal solo/coalesced sweep."""
+        if not self.config.share_subplans:
+            return 0
+        buckets: dict[tuple, list] = {}
+        with self._lock:
+            eligible = {}
+            for key, sg in self._prefixes.items():
+                if len(sg.members) < 2:
+                    continue
+                regimes = {self._tenants[m].group_key for m in sg.members}
+                if len(regimes) >= 2:
+                    eligible[key] = sg
+            if not eligible:
+                return 0
+            for g in self._groups.values():
+                for req in g.queue:
+                    t = self._tenants.get(req.tenant)
+                    sg = eligible.get(t.prefix_key) if t else None
+                    if sg is None:
+                        continue
+                    src = req.bindings.get(sg.source)
+                    if src is None:
+                        continue
+                    buckets.setdefault((t.prefix_key, id(src)),
+                                       []).append(req)
+            take: set[int] = set()
+            for fp, rs in list(buckets.items()):
+                gks = {self._tenants[r.tenant].group_key for r in rs}
+                # a fused prefix pays off only across plan groups — same-
+                # group requests coalesce better on the normal path
+                if len({r.tenant for r in rs}) < 2 or len(gks) < 2:
+                    del buckets[fp]
+                    continue
+                take.update(id(r) for r in rs)
+            if not take:
+                return 0
+            for g in self._groups.values():
+                if g.queue:
+                    g.queue = collections.deque(
+                        r for r in g.queue if id(r) not in take)
+        served = 0
+        for (key, _), rs in buckets.items():
+            served += self._serve_shared(self._prefixes[key], rs)
+        return served
+
+    def _serve_shared(self, sg: _SharedGroup, reqs: list) -> int:
+        """One fused prefix execution for `reqs` (all bound to the same
+        source batch), observed ONCE into the share group's store; each
+        request then runs its tenant's suffix plan on the prefix output,
+        observed into that tenant's private store — so per-tenant stats
+        stay disjoint from the shared stage and from each other.  Any
+        truncation (prefix or suffix) falls back to the solo path, whose
+        own repair policy applies."""
+        cfg = self.config
+        probes, share = [], []
+        for req in reqs:
+            t = self._tenants[req.tenant]
+            t.requests += 1
+            due = (t.requests == 1
+                   or t.requests % cfg.probe_every == 0)
+            (probes if due else share).append(req)
+        for req in probes:
+            self._serve_solo(req)
+        if len({r.tenant for r in share}) < 2:
+            for req in share:   # pairing evaporated into probes
+                self._serve_solo(req)
+            return len(reqs)
+        try:
+            plan = sg.plan
+            staged = plan.bind_device(
+                {sg.source: share[0].bindings[sg.source]})
+            out, counts, caps = plan.run_device_observed(staged, donate=True)
+            trunc = plan.fold_observation(sg.store, counts, caps=caps)
+        except BaseException:
+            for req in share:
+                self._serve_solo(req)
+            return len(reqs)
+        if trunc is not None:   # prefix overran: its output is missing rows
+            self.truncations += 1
+            for req in share:
+                self._serve_solo(req)
+            return len(reqs)
+        pre = out.to_record_batch()
+        sg.batches += 1
+        self.shared_prefix_batches += 1
+        self.device_batches += 1
+        for req in share:
+            t = self._tenants[req.tenant]
+            try:
+                bindings = dict(req.bindings)
+                bindings[sg.source] = pre
+                cp = t.suffix_plan
+                staged = cp.bind_device(bindings)
+                o, c, caps2 = cp.run_device_observed(staged, donate=True)
+                if cp.fold_observation(t.store, c, caps=caps2) is not None:
+                    self.truncations += 1
+                    self._serve_solo(req)   # solo path force-recalibrates
+                    continue
+                self._drift_check(t)
+                req._deliver(value=o.to_record_batch())
+                self.shared_requests += 1
+                self.requests_served += 1
+                self.device_batches += 1
+            except BaseException as e:
+                req._deliver(error=e)
+        return len(reqs)
 
     # -- the two serve paths -------------------------------------------------
     def _serve_batch(self, g: _PlanGroup, reqs: list) -> int:
@@ -647,6 +929,10 @@ class DataflowEngine:
         t.swaps += 1
         t.regime_tick = t.store.clock
         t.armed = 0
+        # the drifter re-links under its NEW regime's prefix key — it leaves
+        # its old share group; co-sharers keep their fused prefix untouched
+        self._unlink_prefix(t)
+        self._link_prefix(t)
 
     def _pretrace(self, g: _PlanGroup, sample) -> None:
         """Warm a freshly built group's executables off the serving path by
@@ -701,9 +987,11 @@ class DataflowEngine:
     # -- introspection -------------------------------------------------------
     def tenant_stats(self, tenant: str) -> dict:
         t = self._tenants[tenant]
+        sg = self._prefixes.get(t.prefix_key)
         return {"requests": t.requests, "swaps": t.swaps,
                 "armed": t.armed, "regime_tick": t.regime_tick,
                 "group_size": len(self._groups[t.group_key].members),
+                "share_group_size": len(sg.members) if sg else 0,
                 "store_batches": t.store.clock}
 
     def stats(self) -> dict:
@@ -711,8 +999,11 @@ class DataflowEngine:
                 "device_batches": self.device_batches,
                 "coalesced_requests": self.coalesced_requests,
                 "solo_requests": self.solo_requests,
+                "shared_requests": self.shared_requests,
+                "shared_prefix_batches": self.shared_prefix_batches,
                 "truncations": self.truncations,
                 "groups": len(self._groups),
+                "share_groups": len(self._prefixes),
                 "repairs": sum(g.repairs for g in self._groups.values()),
                 "pending": self.pending(),
                 "cache": self.cache.stats()}

@@ -171,13 +171,19 @@ class _Gen:
         for _ in range(n_ops):
             schema = node.out_schema
             choice = self.rng.random()
-            if choice < 0.22:
+            if choice < 0.20:
                 node = F.map_(node, self._map_modify(schema))
-            elif choice < 0.40:
+            elif choice < 0.36:
                 node = F.map_(node, self._map_filter(schema))
-            elif choice < 0.52:
+            elif choice < 0.46:
                 node = F.map_(node, self._map_add(schema))
-            elif choice < 0.70:
+            elif choice < 0.54:  # WITH-TIES top-k (deterministic multiset)
+                nk = min(len(schema.fields), int(self.rng.integers(1, 3)))
+                key = [schema.fields[i] for i in self.rng.choice(
+                    len(schema.fields), size=nk, replace=False)]
+                node = F.limit_(node, k=int(self.rng.integers(2, 12)),
+                                key=key, name=self._name("lim"))
+            elif choice < 0.68:
                 key = [schema.fields[self.rng.integers(len(schema.fields))]]
                 if self.rng.random() < 0.6:
                     udf = self._reduce_agg(schema, key)
@@ -185,13 +191,21 @@ class _Gen:
                     udf = self._reduce_passthrough(schema, key)
                 node = F.reduce_(node, key, udf,
                                  hints=Hints(distinct_keys=KEY_DOMAIN))
-            elif choice < 0.86:  # join a fresh dimension source
+            elif choice < 0.80:  # join a fresh dimension source
                 right = self._new_source(2, rows=KEY_DOMAIN, unique_key=True)
                 lk = schema.fields[self.rng.integers(len(schema.fields))]
                 rk = right.out_schema.fields[0]
                 hints = Hints(pk_side="right") if self.rng.random() < 0.7 \
                     else Hints()
                 node = F.match(node, right, [lk], [rk], hints=hints)
+            elif choice < 0.88:  # anti join against a fresh exclusion list
+                right = self._new_source(
+                    2, rows=int(self.rng.integers(2, KEY_DOMAIN + 2)),
+                    unique_key=self.rng.random() < 0.5)
+                lk = schema.fields[self.rng.integers(len(schema.fields))]
+                rk = right.out_schema.fields[0]
+                node = F.match(node, right, [lk], [rk], anti=True,
+                               name=self._name("anti"))
             elif choice < 0.94:  # cross with a single-record source
                 right = self._new_source(2, rows=1, unique_key=False)
                 node = F.cross(node, right)
